@@ -1,0 +1,53 @@
+"""Shared benchmark harness: cached simulator runs + CSV emission.
+
+Every figure module exposes ``run(total_req, force) -> list[dict]`` and a
+``main()``. Results are cached under artifacts/sim/ keyed by all run
+parameters, so re-running the suite is incremental.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+from repro.configs.base import SimConfig
+from repro.core.simulator import simulate
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "sim"
+WORKLOADS = ("bfs-dense", "bc", "radix", "srad", "ycsb", "tpcc", "dlrm")
+VARIANTS = ("base-cssd", "skybyte-c", "skybyte-p", "skybyte-w",
+            "skybyte-cp", "skybyte-wp", "skybyte-full", "dram-only")
+# benchmark default: long enough that every workload's write log passes
+# through multiple compaction cycles (steady state)
+TOTAL_REQ = 1_500_000
+
+
+def cached_sim(workload: str, variant: str, cfg: SimConfig = SimConfig(),
+               total_req: int = TOTAL_REQ, seed: int = 0, n_threads: int = 0,
+               force: bool = False) -> Dict[str, Any]:
+    ART.mkdir(parents=True, exist_ok=True)
+    key = json.dumps(
+        [workload, variant, dataclasses.asdict(cfg), total_req, seed, n_threads],
+        sort_keys=True, default=str,
+    )
+    h = hashlib.sha1(key.encode()).hexdigest()[:16]
+    path = ART / f"{workload}_{variant}_{h}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    t0 = time.time()
+    out = simulate(workload, variant, cfg, total_req=total_req, seed=seed,
+                   n_threads=n_threads)
+    out["wall_s"] = round(time.time() - t0, 1)
+    path.write_text(json.dumps(out, indent=1, default=float))
+    return json.loads(path.read_text())
+
+
+def print_csv(name: str, rows: List[Dict[str, Any]], cols: List[str]) -> None:
+    print(f"# {name}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+    print()

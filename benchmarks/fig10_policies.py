@@ -1,0 +1,40 @@
+"""Fig 10: thread scheduling policy comparison (RR / RANDOM / CFS).
+Paper: the three policies deliver similar performance; CFS is the default."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import SimConfig
+
+from benchmarks.common import TOTAL_REQ, WORKLOADS, cached_sim, print_csv
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WORKLOADS:
+        ref = None
+        for pol in ("RR", "RANDOM", "CFS"):
+            cfg = dataclasses.replace(SimConfig(), sched_policy=pol)
+            r = cached_sim(wl, "skybyte-full", cfg=cfg, total_req=total_req,
+                           force=force)
+            if ref is None:
+                ref = r
+            rows.append({
+                "workload": wl, "policy": pol,
+                "exec_ms": round(r["exec_ns"] / 1e6, 3),
+                "norm_exec": round(r["exec_ns"] / ref["exec_ns"], 4),
+                "ctx_switches": r["ctx_switches"],
+            })
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig10_policies (paper: RR/RANDOM/CFS similar)",
+              rows, ["workload", "policy", "exec_ms", "norm_exec",
+                     "ctx_switches"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

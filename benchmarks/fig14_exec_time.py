@@ -1,0 +1,47 @@
+"""Fig 14: normalized end-to-end execution time of all SkyByte variants vs
+Base-CSSD (paper: SkyByte-Full 6.11x mean speedup, 75% of DRAM-Only)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import TOTAL_REQ, VARIANTS, WORKLOADS, cached_sim, print_csv
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WORKLOADS:
+        base = cached_sim(wl, "base-cssd", total_req=total_req, force=force)
+        for v in VARIANTS:
+            r = cached_sim(wl, v, total_req=total_req, force=force)
+            rows.append({
+                "workload": wl, "variant": v,
+                "exec_ms": round(r["exec_ns"] / 1e6, 3),
+                "norm_exec": round(r["exec_ns"] / base["exec_ns"], 4),
+                "speedup": round(base["exec_ns"] / r["exec_ns"], 3),
+                "ssd_bw_util": round(r["ssd_bw_util"], 4),
+                "ctx_switches": r["ctx_switches"],
+            })
+    full = [r["speedup"] for r in rows if r["variant"] == "skybyte-full"]
+    dram = [r["speedup"] for r in rows if r["variant"] == "dram-only"]
+    fd = [f / d for f, d in zip(full, dram)]
+    rows.append({
+        "workload": "GEOMEAN", "variant": "skybyte-full",
+        "speedup": round(float(np.exp(np.mean(np.log(full)))), 3),
+    })
+    rows.append({
+        "workload": "GEOMEAN", "variant": "full-vs-dram-frac",
+        "speedup": round(float(np.exp(np.mean(np.log(fd)))), 3),
+    })
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig14_exec_time (paper: Full=6.11x geomean, 75% of DRAM-Only)",
+              rows, ["workload", "variant", "exec_ms", "norm_exec", "speedup",
+                     "ssd_bw_util", "ctx_switches"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

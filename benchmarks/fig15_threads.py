@@ -1,0 +1,40 @@
+"""Fig 15: SkyByte-Full throughput + SSD bandwidth utilization vs thread
+count (8 cores). Paper: throughput scales with threads while flash reads
+dominate; flattens when context-switch overhead ~ flash latency."""
+from __future__ import annotations
+
+from benchmarks.common import TOTAL_REQ, WORKLOADS, cached_sim, print_csv
+
+THREADS = (8, 16, 24, 32, 48)
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WORKLOADS:
+        ref = None
+        for nt in THREADS:
+            r = cached_sim(wl, "skybyte-full", total_req=total_req,
+                           n_threads=nt, force=force)
+            if ref is None:
+                ref = r
+            rows.append({
+                "workload": wl, "threads": nt,
+                "throughput_rps": round(r["throughput_rps"], 0),
+                "norm_throughput": round(
+                    r["throughput_rps"] / ref["throughput_rps"], 3),
+                "ssd_bw_util": round(r["ssd_bw_util"], 4),
+                "ctx_switches": r["ctx_switches"],
+            })
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig15_threads (throughput scaling with thread count)",
+              rows, ["workload", "threads", "throughput_rps",
+                     "norm_throughput", "ssd_bw_util", "ctx_switches"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

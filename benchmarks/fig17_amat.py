@@ -1,0 +1,45 @@
+"""Fig 17: average memory access time (AMAT) and its breakdown.
+Paper: SkyByte-Full reduces AMAT 14.19x vs Base-CSSD; remains 1.39x of
+DRAM-Only while end-to-end perf is within 1.33x."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import TOTAL_REQ, VARIANTS, WORKLOADS, cached_sim, print_csv
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WORKLOADS:
+        base = cached_sim(wl, "base-cssd", total_req=total_req, force=force)
+        for v in VARIANTS:
+            r = cached_sim(wl, v, total_req=total_req, force=force)
+            n = max(r["n"], 1)
+            rows.append({
+                "workload": wl, "variant": v,
+                "amat_ns": round(r["amat_ns"], 1),
+                "amat_vs_base": round(base["amat_ns"] / r["amat_ns"], 3),
+                "host_frac": round((r["host_r"] + r["host_w"]) / n, 4),
+                "ssd_hit_frac": round((r["hit_log"] + r["hit_cache"] + r["ssd_w"]) / n, 4),
+                "flash_frac": round(r["miss_flash"] / n, 4),
+                "lat_host_frac": round(r["lat_host"] / max(r["lat_sum"], 1), 4),
+                "lat_hit_frac": round(r["lat_hit"] / max(r["lat_sum"], 1), 4),
+                "lat_flash_frac": round(r["lat_miss"] / max(r["lat_sum"], 1), 4),
+            })
+    red = [r["amat_vs_base"] for r in rows if r["variant"] == "skybyte-full"]
+    rows.append({"workload": "GEOMEAN", "variant": "skybyte-full",
+                 "amat_vs_base": round(float(np.exp(np.mean(np.log(red)))), 3)})
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig17_amat (paper: Full reduces AMAT 14.19x)",
+              rows, ["workload", "variant", "amat_ns", "amat_vs_base",
+                     "host_frac", "ssd_hit_frac", "flash_frac",
+                     "lat_host_frac", "lat_hit_frac", "lat_flash_frac"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

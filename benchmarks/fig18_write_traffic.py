@@ -1,0 +1,44 @@
+"""Fig 18: flash write traffic per variant (paper: SkyByte reduces write
+traffic to flash 23.08x on average vs Base-CSSD)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import TOTAL_REQ, VARIANTS, WORKLOADS, cached_sim, print_csv
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WORKLOADS:
+        base = cached_sim(wl, "base-cssd", total_req=total_req, force=force)
+        for v in VARIANTS:
+            r = cached_sim(wl, v, total_req=total_req, force=force)
+            rows.append({
+                "workload": wl, "variant": v,
+                "flash_write_MB": round(r["flash_write_bytes"] / 1e6, 3),
+                "reduction_vs_base": round(
+                    base["flash_write_bytes"] / max(r["flash_write_bytes"], 1), 2
+                ),
+                "compactions": r.get("compactions", 0),
+                "coalesce_ratio": r.get("coalesce_ratio"),
+                "gc_events": r["gc_events"],
+            })
+    red = [r["reduction_vs_base"] for r in rows
+           if r["variant"] in ("skybyte-w", "skybyte-wp", "skybyte-full")
+           and r["reduction_vs_base"] > 0]
+    rows.append({"workload": "GEOMEAN(W/WP/Full)", "variant": "-",
+                 "reduction_vs_base": round(float(np.exp(np.mean(np.log(red)))), 2)})
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig18_write_traffic (paper: 23.08x reduction)",
+              rows, ["workload", "variant", "flash_write_MB",
+                     "reduction_vs_base", "compactions", "coalesce_ratio",
+                     "gc_events"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Fig 19/20: write-log size sweep at fixed total SSD DRAM (512MB scaled).
+Paper: a small log (<=64MB, 1/8 of SSD DRAM) already provides a sufficient
+coalescing window; benefit tracks reducible flash write traffic."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import SimConfig
+
+from benchmarks.common import TOTAL_REQ, cached_sim, print_csv
+
+LOG_MB = (16, 32, 64, 128, 256)  # at scale=1; scaled down by cfg.scale
+WLS = ("bc", "srad", "tpcc", "dlrm")
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WLS:
+        ref = None
+        for mb in LOG_MB:
+            cfg = dataclasses.replace(SimConfig(), write_log_bytes=mb << 20)
+            r = cached_sim(wl, "skybyte-full", cfg=cfg, total_req=total_req,
+                           force=force)
+            if ref is None:
+                ref = r
+            rows.append({
+                "workload": wl, "log_MB": mb,
+                "exec_ms": round(r["exec_ns"] / 1e6, 3),
+                "norm_exec": round(r["exec_ns"] / ref["exec_ns"], 4),
+                "flash_write_MB": round(r["flash_write_bytes"] / 1e6, 3),
+                "compactions": r.get("compactions", 0),
+            })
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig19_20_logsize (paper: 64MB log ~ enough)",
+              rows, ["workload", "log_MB", "exec_ms", "norm_exec",
+                     "flash_write_MB", "compactions"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig 21: SSD DRAM cache size sweep. Host budget kept at 4x SSD DRAM and
+write log at 1/8 of SSD DRAM (paper's fixed ratios). Paper: SkyByte-Full
+with a small SSD DRAM matches/beats Base-CSSD with much larger DRAM."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import SimConfig
+
+from benchmarks.common import TOTAL_REQ, cached_sim, print_csv
+
+DRAM_MB = (128, 256, 512, 1024)  # at scale=1
+WLS = ("bc", "srad", "tpcc", "dlrm")
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WLS:
+        for mb in DRAM_MB:
+            cfg = dataclasses.replace(
+                SimConfig(),
+                ssd_dram_bytes=mb << 20,
+                write_log_bytes=(mb // 8) << 20,
+                host_dram_bytes=(mb * 4) << 20,
+            )
+            for v in ("base-cssd", "skybyte-full"):
+                r = cached_sim(wl, v, cfg=cfg, total_req=total_req, force=force)
+                rows.append({
+                    "workload": wl, "ssd_dram_MB": mb, "variant": v,
+                    "exec_ms": round(r["exec_ns"] / 1e6, 3),
+                    "amat_ns": round(r["amat_ns"], 1),
+                })
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig21_dramsize (Full at small DRAM ~ Base at large DRAM)",
+              rows, ["workload", "ssd_dram_MB", "variant", "exec_ms", "amat_ns"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Fig 22: flash latency classes (ULL/ULL2/SLC/MLC, Table IV). Paper: the
+write log + context switch win grows with flash latency; with enough
+threads, cheap slow flash approaches expensive fast flash."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import FLASH_CLASSES, SimConfig
+
+from benchmarks.common import TOTAL_REQ, cached_sim, print_csv
+
+WLS = ("bfs-dense", "srad", "tpcc", "dlrm")
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WLS:
+        for cls, flash in FLASH_CLASSES.items():
+            cfg = dataclasses.replace(SimConfig(), flash=flash)
+            base = cached_sim(wl, "skybyte-p", cfg=cfg, total_req=total_req,
+                              force=force)
+            for v, nt in (("skybyte-wp", 0), ("skybyte-full", 16),
+                          ("skybyte-full", 24), ("skybyte-full", 32)):
+                r = cached_sim(wl, v, cfg=cfg, total_req=total_req,
+                               n_threads=nt, force=force)
+                rows.append({
+                    "workload": wl, "flash": cls,
+                    "variant": v + (f"-{nt}" if nt else ""),
+                    "exec_ms": round(r["exec_ns"] / 1e6, 3),
+                    "speedup_vs_P": round(base["exec_ns"] / r["exec_ns"], 3),
+                })
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig22_flashlat (win grows with flash latency)",
+              rows, ["workload", "flash", "variant", "exec_ms", "speedup_vs_P"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig 23: alternative page-migration mechanisms. Paper: SkyByte-CP >
+AstriFlash-CXL (1.09x avg) > SkyByte-CT (TPP sampling); the write log
+stacks on top of TPP too (SkyByte-WCT)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import SimConfig
+
+from benchmarks.common import TOTAL_REQ, WORKLOADS, cached_sim, print_csv
+
+DESIGNS = (
+    ("skybyte-c", "skybyte", "SkyByte-C"),
+    ("skybyte-cp", "skybyte", "SkyByte-CP"),
+    ("skybyte-cp", "tpp", "SkyByte-CT"),
+    ("skybyte-full", "tpp", "SkyByte-WCT"),
+    ("skybyte-cp", "astriflash", "AstriFlash-CXL"),
+    ("skybyte-full", "skybyte", "SkyByte-Full"),
+)
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WORKLOADS:
+        ref = None
+        for variant, policy, label in DESIGNS:
+            cfg = dataclasses.replace(SimConfig(), promo_policy=policy)
+            r = cached_sim(wl, variant, cfg=cfg, total_req=total_req, force=force)
+            if ref is None:
+                ref = r
+            rows.append({
+                "workload": wl, "design": label,
+                "exec_ms": round(r["exec_ns"] / 1e6, 3),
+                "norm_vs_SkyByte-C": round(r["exec_ns"] / ref["exec_ns"], 4),
+                "promotions": r["promotions"], "demotions": r["demotions"],
+            })
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig23_migration (CP > AstriFlash > CT; W stacks on TPP)",
+              rows, ["workload", "design", "exec_ms", "norm_vs_SkyByte-C",
+                     "promotions", "demotions"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

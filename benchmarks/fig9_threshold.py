@@ -1,0 +1,44 @@
+"""Fig 9: context-switch trigger threshold sweep (paper: 2 us — the measured
+context-switch overhead — is the sweet spot; lower over-switches, higher
+under-uses the hiding opportunity)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import SimConfig
+
+from benchmarks.common import TOTAL_REQ, cached_sim, print_csv
+
+THRESHOLDS_NS = (500.0, 1_000.0, 2_000.0, 4_000.0, 8_000.0, 16_000.0)
+WLS = ("bfs-dense", "srad", "tpcc", "dlrm")
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WLS:
+        base = None
+        for th in THRESHOLDS_NS:
+            cfg = dataclasses.replace(SimConfig(), ctx_threshold_ns=th)
+            r = cached_sim(wl, "skybyte-full", cfg=cfg, total_req=total_req,
+                           force=force)
+            if base is None:
+                base = r
+            rows.append({
+                "workload": wl, "threshold_us": th / 1000.0,
+                "exec_ms": round(r["exec_ns"] / 1e6, 3),
+                "norm_exec_vs_500ns": round(r["exec_ns"] / base["exec_ns"], 4),
+                "ctx_switches": r["ctx_switches"],
+            })
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig9_threshold (paper: 2us threshold optimal)",
+              rows, ["workload", "threshold_us", "exec_ms",
+                     "norm_exec_vs_500ns", "ctx_switches"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced request counts
+  PYTHONPATH=src python -m benchmarks.run --only fig14,fig18
+
+Simulator results are cached in artifacts/sim/ (delete to re-run).
+The roofline section reads the dry-run artifacts (artifacts/dryrun/).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    fig9_threshold,
+    fig10_policies,
+    fig14_exec_time,
+    fig15_threads,
+    fig17_amat,
+    fig18_write_traffic,
+    fig19_logsize,
+    fig21_dramsize,
+    fig22_flashlat,
+    fig23_migration,
+    tab3_readlat,
+)
+
+# (name, module, total_req_full, total_req_quick)
+SECTIONS = [
+    ("fig14", fig14_exec_time, 1_500_000, 300_000),
+    ("fig17", fig17_amat, 1_500_000, 300_000),
+    ("fig18", fig18_write_traffic, 1_500_000, 300_000),
+    ("tab3", tab3_readlat, 1_500_000, 300_000),
+    ("fig9", fig9_threshold, 600_000, 200_000),
+    ("fig10", fig10_policies, 600_000, 200_000),
+    ("fig15", fig15_threads, 600_000, 200_000),
+    ("fig19", fig19_logsize, 1_000_000, 200_000),
+    ("fig21", fig21_dramsize, 600_000, 200_000),
+    ("fig22", fig22_flashlat, 600_000, 200_000),
+    ("fig23", fig23_migration, 600_000, 200_000),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    t0 = time.time()
+    for name, mod, full_n, quick_n in SECTIONS:
+        if only and name not in only:
+            continue
+        n = quick_n if args.quick else full_n
+        t1 = time.time()
+        try:
+            mod.main(total_req=n, force=args.force)
+        except Exception as e:  # keep the suite running
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+        print(f"# {name} done in {time.time() - t1:.0f}s\n", flush=True)
+
+    if not args.skip_roofline and (not only or "roofline" in only):
+        try:
+            from benchmarks import roofline
+
+            roofline.main()
+        except Exception as e:
+            print(f"# roofline FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    print(f"# total {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Table III: average flash read latency of SkyByte-WP per workload
+(paper: 3.3-25.7 us depending on compaction/GC interference)."""
+from __future__ import annotations
+
+from benchmarks.common import TOTAL_REQ, WORKLOADS, cached_sim, print_csv
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WORKLOADS:
+        r = cached_sim(wl, "skybyte-wp", total_req=total_req, force=force)
+        lat = r["lat_miss"] / max(r["miss_flash"], 1)
+        rows.append({
+            "workload": wl,
+            "avg_flash_read_us": round(lat / 1000.0, 2),
+            "flash_reads_frac": round(r["miss_flash"] / max(r["n"], 1), 4),
+        })
+    return rows
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("tab3_readlat (paper: 3.3-25.7us)",
+              rows, ["workload", "avg_flash_read_us", "flash_reads_frac"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""The paper's headline experiment in miniature: the §VI-A variant grid on
+two workloads, printing the Fig 14-style normalized execution times.
+
+  PYTHONPATH=src python examples/simulate_skybyte.py
+"""
+from repro.configs.base import VARIANTS
+from repro.core.simulator import simulate
+
+N = 120_000
+for wl in ("bc", "srad"):
+    base = None
+    print(f"--- {wl} ---")
+    for v in VARIANTS:
+        r = simulate(wl, v, total_req=N)
+        if v == "base-cssd":
+            base = r
+        print(f"{v:14s} norm_exec={r['exec_ns']/base['exec_ns']:.3f} "
+              f"amat={r['amat_ns']:8.1f}ns flashwr={r['flash_write_pages']:6d}pg "
+              f"cs={r['ctx_switches']}")

@@ -1,0 +1,37 @@
+"""End-to-end training driver (deliverable b): trains the smollm-135m
+reduced config for a few hundred steps on the synthetic pipeline, with
+checkpointing and (optionally) a simulated crash + recovery.
+
+  PYTHONPATH=src python examples/train_lm.py            # ~200 steps
+  PYTHONPATH=src python examples/train_lm.py --drill    # crash + resume
+
+This is a thin veneer over repro.launch.train (the real launcher) so the
+example and production path cannot drift.
+"""
+import sys
+
+from repro.launch import train as train_launcher
+
+
+def main() -> None:
+    drill = "--drill" in sys.argv
+    base = [
+        "--arch", "smollm-135m", "--steps", "200", "--seq", "128",
+        "--batch", "8", "--accum", "2", "--lr", "3e-3",
+        "--ckpt-dir", "/tmp/repro_example_ckpt", "--ckpt-every", "50",
+    ]
+    if drill:
+        sys.argv = ["train", *base, "--fail-at", "120"]
+        try:
+            train_launcher.main()
+        except SystemExit as e:
+            print(f"[example] crashed as requested (exit {e.code}); resuming...")
+        sys.argv = ["train", *base, "--resume"]
+        train_launcher.main()
+    else:
+        sys.argv = ["train", *base]
+        train_launcher.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Trace-profile calibration (the methodology referenced in core/traces.py).
+
+Searches hot_mass per workload so that Base-CSSD's DRAM-vs-CXL slowdown
+lands near a target taken from the paper's Fig 2 range (1.5-31.4x). The
+shipped WORKLOADS table was produced with this script plus the structural
+choices documented in DESIGN.md §Layer A (3-tier read set, warm write
+set, die-parallel flash model).
+
+  PYTHONPATH=src python scripts/calibrate_traces.py
+"""
+import dataclasses
+
+from repro.core import traces as T
+from repro.core.simulator import simulate
+
+TARGETS = {"bfs-dense": 31.0, "bc": 8.0, "radix": 5.0, "srad": 12.0,
+           "ycsb": 10.0, "tpcc": 3.0, "dlrm": 20.0}
+
+
+def calibrate(wl: str, target: float, total_req: int = 200_000, iters: int = 6):
+    spec0 = T.WORKLOADS[wl]
+    lo, hi = 0.75, 0.9995
+    best = None
+    for _ in range(iters):
+        mid = (lo + hi) / 2
+        T.WORKLOADS[wl] = dataclasses.replace(spec0, hot_mass=mid)
+        b = simulate(wl, "base-cssd", total_req=total_req)
+        d = simulate(wl, "dram-only", total_req=total_req)
+        ratio = b["exec_ns"] / d["exec_ns"]
+        best = (mid, ratio)
+        if ratio > target:
+            lo = mid
+        else:
+            hi = mid
+    T.WORKLOADS[wl] = spec0
+    return best
+
+
+if __name__ == "__main__":
+    for wl, tgt in TARGETS.items():
+        mass, ratio = calibrate(wl, tgt)
+        print(f"{wl:10s} target={tgt:5.1f} -> hot_mass={mass:.4f} ratio={ratio:6.1f}")

@@ -1,0 +1,51 @@
+"""Dev smoke: every reduced arch — forward, loss+grad, prefill, decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models.api import ModelSpec
+
+ok = True
+for arch in ARCH_IDS:
+    cfg = get_reduced(arch)
+    spec = ModelSpec(cfg)
+    rng = jax.random.PRNGKey(0)
+    try:
+        params = spec.init(rng)
+        batch = spec.smoke_batch(rng, batch=2, seq=32)
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: spec.loss(p, batch), has_aux=True
+        )(params)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(grads))
+        )
+        assert jnp.isfinite(loss), f"{arch}: loss not finite: {loss}"
+        assert jnp.isfinite(gnorm), f"{arch}: grad norm not finite"
+        # prefill + decode
+        logits, cache = spec.prefill(params, batch["tokens"], batch.get("frontend"))
+        assert logits.shape == (2, cfg.vocab), (arch, logits.shape)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        pos = jnp.int32(32)
+        # decode needs cache padded to > pos; re-init at max_len 48 and splice prefill len
+        dec_cache = spec.init_cache(2, 48)
+        for k, v_ in cache.items():
+            if k in dec_cache and dec_cache[k].ndim == v_.ndim and k != "length":
+                if dec_cache[k].shape == v_.shape:
+                    dec_cache[k] = v_
+                else:  # pad seq dim (axis 2)
+                    pads = [(0, a - b) for a, b in zip(dec_cache[k].shape, v_.shape)]
+                    dec_cache[k] = jnp.pad(v_, pads)
+        dec_cache["length"] = cache["length"]
+        logits2, cache2 = spec.decode_step(params, dec_cache, tok, pos)
+        assert logits2.shape == (2, cfg.vocab), (arch, logits2.shape)
+        assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32)))), f"{arch}: decode NaN"
+        print(f"PASS {arch:28s} loss={float(loss):.4f} gnorm={float(gnorm):.3f} params={spec.param_count():,}")
+    except Exception as e:
+        ok = False
+        import traceback
+
+        print(f"FAIL {arch}: {e}")
+        traceback.print_exc()
+sys.exit(0 if ok else 1)

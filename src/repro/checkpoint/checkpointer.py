@@ -1,0 +1,142 @@
+"""Checkpointing with async save, atomic publish, and elastic restore.
+
+Fault-tolerance substrate for long runs:
+  * save(step, state)    — tree flattened to npz + JSON manifest, written to
+                           a temp dir and atomically renamed (a crash mid-
+                           save never corrupts the latest checkpoint);
+                           ``async_save`` moves serialization off the step
+                           loop (overlap with compute).
+  * restore(shardings=)  — loads the latest step; when ``shardings`` is
+                           given, every leaf is re-placed with the NEW
+                           sharding — restoring onto a different mesh/
+                           device count (elastic scaling) is therefore the
+                           same code path as same-mesh restart.
+  * keeps the data-pipeline state in the manifest so input streams resume
+    exactly.
+
+At 1000+-node scale each host would write only its addressable shards
+(jax.experimental.array_serialization); the manifest/atomic-rename/elastic
+structure here is the same — documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # ---- save ----
+    def save(self, step: int, state: Pytree, extra: Optional[Dict] = None) -> None:
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_leaves, str(treedef), extra)
+            )
+            self._thread.start()
+        else:
+            self._write(step, host_leaves, str(treedef), extra)
+
+    def _write(self, step, host_leaves, treedef_str, extra) -> None:
+        tmp = self.dir / f".tmp_step_{step}"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        # npz has no bfloat16: store a uint16 view, record the true dtype
+        dtypes = [str(a.dtype) for a in host_leaves]
+        stored = [
+            a.view(np.uint16) if str(a.dtype) == "bfloat16" else a
+            for a in host_leaves
+        ]
+        np.savez(tmp / "leaves.npz", **{f"l{i}": a for i, a in enumerate(stored)})
+        manifest = {
+            "step": step,
+            "n_leaves": len(host_leaves),
+            "dtypes": dtypes,
+            "treedef": treedef_str,
+            "extra": extra or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---- restore ----
+    def all_steps(self):
+        return [
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if (p / "manifest.json").exists()
+        ]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(
+        self,
+        target: Pytree,
+        step: Optional[int] = None,
+        shardings: Optional[Pytree] = None,
+    ):
+        """Restore into the structure of ``target``. ``shardings`` (a tree
+        matching target, or a single sharding) re-places leaves — pass the
+        NEW mesh's shardings to restore elastically."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        with np.load(d / "leaves.npz") as z:
+            host_leaves = [z[f"l{i}"] for i in range(manifest["n_leaves"])]
+        import ml_dtypes
+
+        host_leaves = [
+            a.view(ml_dtypes.bfloat16) if dt == "bfloat16" else a
+            for a, dt in zip(host_leaves, manifest.get("dtypes", [""] * len(host_leaves)))
+        ]
+        leaves, treedef = jax.tree_util.tree_flatten(target)
+        assert len(leaves) == len(host_leaves), (
+            f"checkpoint has {len(host_leaves)} leaves, target {len(leaves)}"
+        )
+        if shardings is None:
+            new = [jax.numpy.asarray(a) for a in host_leaves]
+        else:
+            sh_leaves = (
+                jax.tree_util.tree_leaves(shardings)
+                if not isinstance(shardings, jax.sharding.Sharding)
+                else [shardings] * len(host_leaves)
+            )
+            new = [
+                jax.device_put(a, s) for a, s in zip(host_leaves, sh_leaves)
+            ]
+        return jax.tree_util.tree_unflatten(treedef, new), manifest["extra"], step

@@ -1,0 +1,82 @@
+"""Architecture registry: --arch <id> resolution for every assigned arch."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.configs.base import (
+    FLASH_CLASSES,
+    FlashTiming,
+    ModelConfig,
+    MoEConfig,
+    OptimConfig,
+    RunConfig,
+    SHAPES,
+    ShapeConfig,
+    SimConfig,
+    SSMConfig,
+    VARIANTS,
+    shape_applicable,
+)
+from repro.configs import (
+    llama4_scout,
+    llava_next_34b,
+    mistral_large_123b,
+    olmoe_1b_7b,
+    qwen25_32b,
+    qwen3_1p7b,
+    rwkv6_3b,
+    smollm_135m,
+    whisper_base,
+    zamba2_7b,
+)
+
+_MODULES = {
+    "whisper-base": whisper_base,
+    "qwen2.5-32b": qwen25_32b,
+    "mistral-large-123b": mistral_large_123b,
+    "smollm-135m": smollm_135m,
+    "qwen3-1.7b": qwen3_1p7b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "llama4-scout-17b-a16e": llama4_scout,
+    "rwkv6-3b": rwkv6_3b,
+    "llava-next-34b": llava_next_34b,
+    "zamba2-7b": zamba2_7b,
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return _MODULES[arch].config()
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return _MODULES[arch].reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {k: m.config() for k, m in _MODULES.items()}
+
+
+__all__ = [
+    "ARCH_IDS",
+    "FLASH_CLASSES",
+    "FlashTiming",
+    "ModelConfig",
+    "MoEConfig",
+    "OptimConfig",
+    "RunConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "SimConfig",
+    "SSMConfig",
+    "VARIANTS",
+    "all_configs",
+    "get_config",
+    "get_reduced",
+    "shape_applicable",
+]

@@ -1,0 +1,373 @@
+"""Config system for the repro framework.
+
+Three config families:
+  * ModelConfig  — architecture hyperparameters (one file per assigned arch).
+  * ShapeConfig  — the assigned input-shape grid (train_4k / prefill_32k /
+                   decode_32k / long_500k).
+  * SimConfig    — the SkyByte CXL-SSD simulator parameters (paper Table II).
+
+Everything is a frozen dataclass so configs are hashable and safe to close
+over in jitted functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Mapping, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block parameters."""
+
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_expert: bool = False
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """State-space / linear-recurrence block parameters (RWKV6, Mamba2)."""
+
+    kind: str  # "rwkv6" | "mamba2"
+    heads: int
+    head_dim: int
+    state_dim: int  # per-head recurrent state width
+    chunk: int = 128  # chunked-scan block length (sequence dim)
+    conv_dim: int = 4  # mamba2 short conv width
+    expand: int = 2  # mamba2 inner expansion
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One assigned architecture. Families:
+
+    dense  — decoder-only transformer (GQA)
+    moe    — decoder-only transformer with MoE FFN
+    ssm    — attention-free (RWKV6)
+    hybrid — Mamba2 backbone + shared attention block (Zamba2)
+    encdec — encoder-decoder transformer (Whisper), audio frontend stubbed
+    vlm    — decoder-only backbone + vision patch frontend stubbed (LLaVA)
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # enc-dec (whisper): n_layers is the decoder depth; enc_layers the encoder.
+    enc_layers: int = 0
+    # hybrid (zamba2): apply the single shared attention block every N layers.
+    shared_attn_every: int = 0
+    # modality frontend stub: None | "audio" | "vision"
+    frontend: Optional[str] = None
+    # number of stub frontend embeddings prepended to the token sequence
+    # (vision patches). For "audio" the encoder length is seq_len // 4.
+    n_frontend_tokens: int = 0
+    dtype: str = "bfloat16"
+    # True if sequence mixing is sub-quadratic (eligible for long_500k).
+    sub_quadratic: bool = False
+    # per-(shape-name) microbatch size PER DATA SHARD for gradient
+    # accumulation; keys missing -> default 8.
+    microbatch: Mapping[str, int] = field(default_factory=dict)
+    # serving: tokens per KV page for the SkyByte paged-KV runtime.
+    kv_page_size: int = 256
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        """Analytical parameter count (embedding + blocks + head)."""
+        d, h, kv, hd, ff, L = (
+            self.d_model,
+            self.n_heads,
+            self.n_kv_heads,
+            self.resolved_head_dim,
+            self.d_ff,
+            self.n_layers,
+        )
+        n = self.vocab * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab * d  # lm head
+        if self.family in ("dense", "moe", "vlm", "encdec"):
+            attn = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+            if self.family == "moe" and self.moe is not None:
+                ffn = self.moe.num_experts * 3 * d * self.moe.d_ff_expert
+                if self.moe.shared_expert:
+                    ffn += 3 * d * (self.moe.d_ff_shared or ff)
+            else:
+                ffn = 3 * d * ff
+            n += L * (attn + ffn + 2 * d)
+            if self.family == "encdec":
+                # encoder blocks + decoder cross-attention
+                n += self.enc_layers * (attn + 3 * d * ff + 2 * d)
+                n += L * (attn + d)  # cross attn + its norm
+        elif self.family == "ssm":
+            s = self.ssm
+            inner = s.heads * s.head_dim
+            # rwkv6: time-mix (r,k,v,g,o + decay/first) + channel-mix
+            n += L * (5 * d * inner + 2 * inner + 3 * d * ff // 2 + 2 * d)
+        elif self.family == "hybrid":
+            s = self.ssm
+            inner = self.d_model * s.expand
+            mamba = d * 2 * inner + inner * s.conv_dim + inner * (
+                2 * s.state_dim
+            ) + inner * d + 2 * s.heads
+            n += L * (mamba + 2 * d)
+            attn = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+            n += attn + 3 * d * ff + 2 * d  # one shared block
+        return n
+
+    def active_param_count(self) -> int:
+        """Active (per-token) parameters — differs for MoE."""
+        if self.family != "moe" or self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        m = self.moe
+        total = self.param_count()
+        all_experts = L * m.num_experts * 3 * d * m.d_ff_expert
+        active = L * m.top_k * 3 * d * m.d_ff_expert
+        return total - all_experts + active
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell. kind selects which step is lowered:
+    train -> train_step, prefill -> prefill, decode -> serve_step."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Mapping[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs, per DESIGN.md §Shape skips."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention (pure full-attention arch)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Training / runtime configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    # distributed-optimization tricks
+    compress_grads: bool = False  # int8 + error-feedback DP all-reduce
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Launcher-level knobs."""
+
+    arch: str = "smollm-135m"
+    shape: str = "train_4k"
+    multi_pod: bool = False
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    async_checkpoint: bool = True
+    seed: int = 0
+    tiering: str = "skybyte"  # "skybyte" | "baseline" (serving KV management)
+    # activation (sequence) sharding of the residual stream over the model
+    # axis between layers — beyond-paper memory optimization (see §Perf).
+    seq_shard_activations: bool = False
+    remat: str = "full"  # "full" | "none"
+
+
+# ---------------------------------------------------------------------------
+# SkyByte simulator config — paper Table II
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FlashTiming:
+    """NAND flash timing (paper Table IV), in nanoseconds."""
+
+    read_ns: float = 3_000.0  # ULL Z-NAND tR
+    program_ns: float = 100_000.0  # tProg
+    erase_ns: float = 1_000_000.0  # tBERS
+
+
+FLASH_CLASSES: Mapping[str, FlashTiming] = {
+    "ULL": FlashTiming(3_000.0, 100_000.0, 1_000_000.0),  # Samsung Z-NAND
+    "ULL2": FlashTiming(4_000.0, 75_000.0, 850_000.0),  # Toshiba XL-Flash
+    "SLC": FlashTiming(25_000.0, 200_000.0, 1_500_000.0),
+    "MLC": FlashTiming(50_000.0, 600_000.0, 3_000_000.0),
+}
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """CXL-SSD simulator parameters. Defaults follow paper Table II scaled by
+    `scale` so laptop-scale runs finish quickly (the paper itself scales the
+    2TB/16GB Samsung prototype down to 128GB/512MB at the same ratio; we keep
+    all *ratios* fixed and scale absolute sizes by `scale`)."""
+
+    # --- host CPU ---
+    n_cores: int = 8
+    n_threads: int = 8  # 24 when context switch is enabled (paper §VI-A)
+    freq_ghz: float = 4.0
+    # OoO overlap window: short latencies (SSD DRAM hits) are partially hidden
+    # behind the compute gap; models 256-entry ROB MLP at request level.
+    overlap_ns: float = 60.0
+    max_outstanding: int = 8  # per-core MSHR-limited outstanding misses
+    # --- host DRAM ---
+    host_dram_ns: float = 70.0
+    # max bytes of promoted pages in host DRAM (Table II: 2GB at scale=1)
+    host_dram_bytes: int = 2 << 30
+    # --- CXL / SSD ---
+    cxl_protocol_ns: float = 40.0
+    ssd_dram_ns: float = 120.0  # LPDDR4 access
+    log_index_ns: float = 72.0  # §V FPGA measurement: write-log index lookup
+    cache_index_ns: float = 49.0  # §V: data-cache index lookup
+    page_bytes: int = 4_096
+    cacheline_bytes: int = 64
+    # SSD geometry (Table II): 16 channels, 128GB total at scale=1
+    n_channels: int = 16
+    flash_bytes: int = 128 << 30
+    ssd_dram_bytes: int = 512 << 20  # data cache + write log budget
+    write_log_bytes: int = 64 << 20
+    channel_queue_depth: int = 64
+    flash: FlashTiming = field(default_factory=FlashTiming)
+    # --- GC (Table II) ---
+    gc_threshold: float = 0.80  # trigger when utilization above this
+    gc_pages_per_event: int = 256  # valid pages migrated per GC event
+    # --- context switch (paper §III-A) ---
+    ctx_switch_ns: float = 2_000.0
+    ctx_threshold_ns: float = 2_000.0
+    sched_policy: str = "CFS"  # "RR" | "RANDOM" | "CFS"
+    # --- design-point flags (paper §VI-A ablation grid) ---
+    enable_ctx_switch: bool = False  # -C
+    enable_promotion: bool = False  # -P
+    enable_write_log: bool = False  # -W
+    dram_only: bool = False  # ideal DRAM-Only baseline
+    # --- promotion policy (§III-C / §VI-H alternatives) ---
+    # "skybyte": per-page counters + threshold (the paper's default)
+    # "tpp": TPP-style periodic sampling (noisier hotness estimate)
+    # "astriflash": host DRAM as a page-granular cache of every SSD access
+    promo_policy: str = "skybyte"
+    promote_threshold: int = 8  # accesses before a page becomes a candidate
+    migration_page_ns: float = 3_000.0  # page copy + PLB bookkeeping
+    # --- simulation scale ---
+    scale: int = 128  # divide all capacities by this (ratios preserved)
+    cache_ways: int = 8
+
+    # ----- derived (scaled) quantities -----
+    @property
+    def eff_flash_bytes(self) -> int:
+        return self.flash_bytes // self.scale
+
+    @property
+    def eff_ssd_dram_bytes(self) -> int:
+        return self.ssd_dram_bytes // self.scale
+
+    @property
+    def eff_write_log_bytes(self) -> int:
+        return self.write_log_bytes // self.scale
+
+    @property
+    def eff_host_dram_bytes(self) -> int:
+        return self.host_dram_bytes // self.scale
+
+    @property
+    def n_flash_pages(self) -> int:
+        return self.eff_flash_bytes // self.page_bytes
+
+    @property
+    def log_entries(self) -> int:
+        return self.eff_write_log_bytes // self.cacheline_bytes
+
+    @property
+    def cache_pages(self) -> int:
+        if self.enable_write_log:
+            return (self.eff_ssd_dram_bytes - self.eff_write_log_bytes) // self.page_bytes
+        return self.eff_ssd_dram_bytes // self.page_bytes
+
+    @property
+    def host_pages(self) -> int:
+        return self.eff_host_dram_bytes // self.page_bytes
+
+    @property
+    def lines_per_page(self) -> int:
+        return self.page_bytes // self.cacheline_bytes
+
+    def variant(self, name: str) -> "SimConfig":
+        """Paper §VI-A design points by name."""
+        flags = {
+            "base-cssd": dict(),
+            "skybyte-c": dict(enable_ctx_switch=True),
+            "skybyte-p": dict(enable_promotion=True),
+            "skybyte-w": dict(enable_write_log=True),
+            "skybyte-cp": dict(enable_ctx_switch=True, enable_promotion=True),
+            "skybyte-wp": dict(enable_write_log=True, enable_promotion=True),
+            "skybyte-full": dict(
+                enable_ctx_switch=True,
+                enable_promotion=True,
+                enable_write_log=True,
+            ),
+            "dram-only": dict(dram_only=True),
+        }[name.lower()]
+        n_threads = self.n_cores * 3 if flags.get("enable_ctx_switch") else self.n_cores
+        return dataclasses.replace(self, n_threads=n_threads, **flags)
+
+
+VARIANTS = (
+    "base-cssd",
+    "skybyte-c",
+    "skybyte-p",
+    "skybyte-w",
+    "skybyte-cp",
+    "skybyte-wp",
+    "skybyte-full",
+    "dram-only",
+)

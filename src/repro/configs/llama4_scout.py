@@ -1,0 +1,46 @@
+"""llama4-scout-17b-a16e [moe]: 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16 experts top-1 + shared expert; early-fusion multimodal
+noted in DESIGN.md (text backbone built here).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e",
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=202_048,
+        moe=MoEConfig(
+            num_experts=16,
+            top_k=1,
+            d_ff_expert=8192,
+            shared_expert=True,
+            d_ff_shared=8192,
+        ),
+        rope_theta=500_000.0,
+        sub_quadratic=False,
+        microbatch={"train_4k": 1},
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-reduced",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=96,
+        vocab=128,
+        moe=MoEConfig(
+            num_experts=4, top_k=1, d_ff_expert=96, shared_expert=True, d_ff_shared=96
+        ),
+        microbatch={"train_4k": 2},
+    )

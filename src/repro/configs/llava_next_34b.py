@@ -1,0 +1,40 @@
+"""llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 — anyres tiling; vision frontend is a STUB (input_specs()
+supplies precomputed patch embeddings).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf family; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b",
+        family="vlm",
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=20_480,
+        vocab=64_000,
+        frontend="vision",
+        n_frontend_tokens=1152,  # anyres: base 576 + 576 tile patches (2x2 pooled)
+        rope_theta=5_000_000.0,
+        sub_quadratic=False,
+        microbatch={"train_4k": 1},
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b-reduced",
+        family="vlm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=160,
+        vocab=128,
+        frontend="vision",
+        n_frontend_tokens=16,
+        microbatch={"train_4k": 2},
+    )

@@ -1,0 +1,36 @@
+"""mistral-large-123b [dense]: 88L d_model=12288 96H (GQA kv=8) d_ff=28672
+vocab=32768. [hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-large-123b",
+        family="dense",
+        n_layers=88,
+        d_model=12_288,
+        n_heads=96,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=28_672,
+        vocab=32_768,
+        rope_theta=1_000_000.0,
+        sub_quadratic=False,
+        microbatch={"train_4k": 1},
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-large-123b-reduced",
+        family="dense",
+        n_layers=2,
+        d_model=96,
+        n_heads=6,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=224,
+        vocab=128,
+        microbatch={"train_4k": 2},
+    )

@@ -1,0 +1,38 @@
+"""olmoe-1b-7b [moe]: 16L d_model=2048 16H (kv=16) d_ff=1024(expert)
+vocab=50304, MoE 64 experts top-8. [arXiv:2409.02060; hf]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b",
+        family="moe",
+        n_layers=16,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1024,
+        vocab=50_304,
+        qk_norm=True,  # OLMoE uses QK-norm
+        moe=MoEConfig(num_experts=64, top_k=8, d_ff_expert=1024),
+        rope_theta=10_000.0,
+        sub_quadratic=False,
+        microbatch={"train_4k": 4},
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b-reduced",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=96,
+        vocab=128,
+        qk_norm=True,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=96),
+        microbatch={"train_4k": 2},
+    )

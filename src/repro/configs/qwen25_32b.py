@@ -1,0 +1,36 @@
+"""qwen2.5-32b [dense]: 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064 — GQA with QKV bias. [hf:Qwen/Qwen2.5-0.5B family; hf]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=27_648,
+        vocab=152_064,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        sub_quadratic=False,
+        microbatch={"train_4k": 2},
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-32b-reduced",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=160,
+        vocab=128,
+        qkv_bias=True,
+        microbatch={"train_4k": 2},
+    )

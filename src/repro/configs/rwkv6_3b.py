@@ -1,0 +1,38 @@
+"""rwkv6-3b [ssm]: 32L d_model=2560 (attn-free) d_ff=8960 vocab=65536 —
+Finch: data-dependent decay linear recurrence. [arXiv:2404.05892; hf]
+
+Sub-quadratic: runs long_500k.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b",
+        family="ssm",
+        n_layers=32,
+        d_model=2560,
+        n_heads=40,  # head_dim 64
+        n_kv_heads=40,
+        d_ff=8960,
+        vocab=65_536,
+        ssm=SSMConfig(kind="rwkv6", heads=40, head_dim=64, state_dim=64, chunk=64),
+        sub_quadratic=True,
+        microbatch={"train_4k": 4},
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b-reduced",
+        family="ssm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=128,
+        ssm=SSMConfig(kind="rwkv6", heads=4, head_dim=16, state_dim=16, chunk=32),
+        sub_quadratic=True,
+        microbatch={"train_4k": 2},
+    )

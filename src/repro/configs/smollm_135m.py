@@ -1,0 +1,38 @@
+"""smollm-135m [dense]: 30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152
+— llama-arch small. [hf:HuggingFaceTB/SmolLM-135M; hf]
+
+Also the end-to-end training example arch (examples/train_lm.py).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-135m",
+        family="dense",
+        n_layers=30,
+        d_model=576,
+        n_heads=9,
+        n_kv_heads=3,
+        d_ff=1536,
+        vocab=49_152,
+        tie_embeddings=True,
+        rope_theta=10_000.0,
+        sub_quadratic=False,
+        microbatch={"train_4k": 8},
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-135m-reduced",
+        family="dense",
+        n_layers=2,
+        d_model=48,
+        n_heads=3,
+        n_kv_heads=1,
+        d_ff=128,
+        vocab=128,
+        tie_embeddings=True,
+        microbatch={"train_4k": 2},
+    )

@@ -1,0 +1,41 @@
+"""whisper-base [audio]: 6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865.
+
+Encoder-decoder; conv audio frontend is a STUB — input_specs() supplies
+precomputed frame embeddings of length seq_len // 4 (Whisper's conv stack
+downsamples 2x over 2x-strided mel frames). [arXiv:2212.04356; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base",
+        family="encdec",
+        n_layers=6,  # decoder depth
+        enc_layers=6,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab=51_865,
+        frontend="audio",
+        rope_theta=10_000.0,
+        sub_quadratic=False,
+        microbatch={"train_4k": 16},
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base-reduced",
+        family="encdec",
+        n_layers=2,
+        enc_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=128,
+        frontend="audio",
+        microbatch={"train_4k": 2},
+    )

@@ -1,0 +1,45 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (kv=32) d_ff=14336 vocab=32000,
+ssm_state=64 — Mamba2 backbone + shared attention block applied every 6
+layers (Zamba2's per-invocation LoRA on the shared block is simplified to
+fully-shared weights; noted in DESIGN.md). [arXiv:2411.15242; unverified]
+
+Hybrid (Mamba2 + periodic attention): runs long_500k.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b",
+        family="hybrid",
+        n_layers=81,
+        d_model=3584,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=112,
+        d_ff=14_336,
+        vocab=32_000,
+        ssm=SSMConfig(kind="mamba2", heads=56, head_dim=128, state_dim=64, chunk=128),
+        shared_attn_every=6,
+        rope_theta=10_000.0,
+        sub_quadratic=True,
+        microbatch={"train_4k": 2},
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b-reduced",
+        family="hybrid",
+        n_layers=4,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab=128,
+        ssm=SSMConfig(kind="mamba2", heads=4, head_dim=32, state_dim=16, chunk=32),
+        shared_attn_every=2,
+        sub_quadratic=True,
+        microbatch={"train_4k": 2},
+    )

@@ -1,0 +1,365 @@
+"""SkyByte system simulator — multi-core trace replay against the CXL-SSD.
+
+Reproduces the paper's evaluation harness (§V): per-thread off-chip access
+traces are replayed on N cores against the device model in ssd.py, with the
+three SkyByte mechanisms as selectable flags (SimConfig.variant), exactly
+mirroring the §VI-A ablation grid:
+
+  Base-CSSD    — page-granular DRAM cache only (write-allocate, write-back)
+  SkyByte-C    — + coordinated context switch (Algorithm 1 trigger)
+  SkyByte-P    — + adaptive page promotion to host DRAM
+  SkyByte-W    — + cacheline write log & compaction
+  -CP/-WP/Full — combinations
+  DRAM-Only    — ideal infinite host DRAM
+
+Timing model (request-event level; deltas vs the paper's cycle-accurate
+MacSim are confined to sub-100ns effects and documented in DESIGN.md):
+  host DRAM hit   : host_dram_ns
+  SSD log hit     : cxl + log_index + ssd_dram
+  SSD cache hit   : cxl + cache_index + ssd_dram
+  SSD miss        : cxl + cache_index + channel queue + t_read + ssd_dram
+  context switch  : ctx_switch_ns charged to the core; blocked thread
+                    becomes runnable at flash completion; the re-issued
+                    (replayed) access is charged as an SSD DRAM hit, and
+                    the squashed original is excluded from AMAT (§VI-D).
+
+Scheduling policies: RR / RANDOM / CFS (default, vruntime-based).
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Dict, List
+
+from repro.configs.base import SimConfig
+from repro.core.ssd import Channels, DataCache, Ftl, WriteLog
+from repro.core.traces import gen_traces
+
+PAGE = 4096
+LINE = 64
+
+
+class Stats:
+    __slots__ = (
+        "n", "host_r", "host_w", "hit_log", "hit_cache", "miss_flash", "ssd_w",
+        "lat_sum", "lat_host", "lat_hit", "lat_miss", "ctx_switches",
+        "flash_write_pages", "gc_events", "promotions", "demotions",
+        "exec_ns", "busy_ns", "replays",
+    )
+
+    def __init__(self):
+        for f in self.__slots__:
+            setattr(self, f, 0)
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = {f: getattr(self, f) for f in self.__slots__}
+        n = max(self.n, 1)
+        d["amat_ns"] = self.lat_sum / n
+        d["flash_write_bytes"] = self.flash_write_pages * PAGE
+        return d
+
+
+class Thread:
+    __slots__ = ("tid", "page", "line", "write", "gap", "i", "n", "ready",
+                 "vruntime", "last_sched", "running", "replay", "done")
+
+    def __init__(self, tid: int, trace: Dict):
+        self.tid = tid
+        self.page = trace["page"]
+        self.line = trace["line"]
+        self.write = trace["write"]
+        self.gap = trace["gap_ns"]
+        self.i = 0
+        self.n = len(self.page)
+        self.ready = 0.0
+        self.vruntime = 0.0
+        self.last_sched = 0
+        self.running = False
+        self.replay = False
+        self.done = False
+
+
+class Machine:
+    def __init__(self, cfg: SimConfig, seed: int = 0):
+        self.cfg = cfg
+        self.channels = Channels(cfg)
+        self.ftl = Ftl(cfg, self.channels)
+        self.cache = DataCache(cfg)
+        self.log = WriteLog(cfg) if cfg.enable_write_log else None
+        self.host: "OrderedDict[int, bool]" = __import__("collections").OrderedDict()
+        self.host_cap = max(cfg.host_pages, 1)
+        self.acc_count: Dict[int, int] = {}
+        self.stats = Stats()
+        self.rng = random.Random(seed)
+
+    # ---- promotion (§III-C; §VI-H alternative policies) ----
+    def _maybe_promote(self, page: int, now: float) -> None:
+        cfg = self.cfg
+        if not cfg.enable_promotion:
+            return
+        if cfg.promo_policy == "tpp":
+            # TPP: periodic sampling — hotness observed only 1/4 of the time
+            if self.rng.random() < 0.75:
+                return
+            c = self.acc_count.get(page, 0) + 1
+            self.acc_count[page] = c
+            if c < max(cfg.promote_threshold // 4, 2) or page in self.host:
+                return
+        elif cfg.promo_policy == "astriflash":
+            # AstriFlash: host DRAM as a page cache of the SSD — every
+            # touched page is installed (no hotness filter)
+            if page in self.host:
+                return
+        else:
+            c = self.acc_count.get(page, 0) + 1
+            self.acc_count[page] = c
+            if c < cfg.promote_threshold or page in self.host:
+                return
+        # paper: only pages resident in SSD DRAM cache are candidates
+        if self.cache.lookup(page, touch=False) is None:
+            return
+        if len(self.host) >= self.host_cap:
+            # Linux-reclaim-style: demote the coldest (LRU order) page
+            cold, _ = self.host.popitem(last=False)
+            self.stats.demotions += 1
+            self.acc_count[cold] = 0  # restart hotness tracking (no ping-pong)
+            ev = self.cache.insert(cold, True)  # back to SSD DRAM, dirty
+            self._handle_evict(ev, now)
+        self.host[page] = True
+        self.cache.remove(page)
+        self.stats.promotions += 1
+
+    def _handle_evict(self, ev, now: float) -> None:
+        if ev is not None and ev[1]:  # dirty page writeback
+            self.channels.write(ev[0], now)
+            self.ftl.on_flash_write(now)
+            self.stats.flash_write_pages += 1
+
+    # ---- compaction (§III-B) ----
+    def _compact(self, now: float) -> None:
+        """Background log compaction. Flushes are *staggered* so compaction
+        uses at most ~half of each channel's bandwidth — the paper drains
+        the old log off the critical path (146 us per compaction step,
+        §III-B) rather than monopolizing the flash channels; foreground
+        reads must keep making progress between compaction programs."""
+        log = self.log
+        old = log.swap_for_compaction()
+        for page, lines in old.items():
+            if self.cache.lookup(page, touch=False) is None:
+                self.channels.read(page, now)  # coalescing-buffer fill
+            self.channels.write(page, now)
+            self.ftl.on_flash_write(now)
+            self.stats.flash_write_pages += 1
+            log.flushed_pages += 1
+            log.flushed_lines += len(lines)
+        log.finish_compaction()
+
+    # ---- request service ----
+    def serve(self, page: int, line: int, is_write: bool, now: float, wslots):
+        """Returns (latency_ns, blocked_until or None, amat_class).
+
+        blocked_until is set when the coordinated context switch fires:
+        the thread parks until flash completion and replays the access.
+        ``wslots``: per-core in-flight posted-write completion times (models
+        the MSHR/write-buffer bound max_outstanding — a Base-CSSD write miss
+        fetches its page in the background and only stalls the core when all
+        slots are occupied).
+        """
+        cfg = self.cfg
+        st = self.stats
+        if cfg.dram_only:
+            cls = "host_w" if is_write else "host_r"
+            return cfg.host_dram_ns, None, cls
+
+        if page in self.host:
+            self.host.move_to_end(page)
+            return cfg.host_dram_ns, None, ("host_w" if is_write else "host_r")
+
+        base = cfg.cxl_protocol_ns
+        if is_write:
+            if self.log is not None:
+                lat = base + cfg.log_index_ns + cfg.ssd_dram_ns
+                full = self.log.append(page, line)
+                if self.cache.lookup(page, touch=False) is not None:
+                    pass  # parallel in-place cache update (kept consistent)
+                if full:
+                    self._compact(now)
+                self._maybe_promote(page, now)
+                return lat, None, "ssd_w"
+            # Base-CSSD: write-allocate into the page cache (posted store;
+            # background page fetch occupies a write slot)
+            hit = self.cache.lookup(page)
+            if hit is not None:
+                self.cache.mark_dirty(page)
+                self._maybe_promote(page, now)
+                return base + cfg.cache_index_ns + cfg.ssd_dram_ns, None, "ssd_w"
+            stall = 0.0
+            if len(wslots) >= cfg.max_outstanding:
+                oldest = min(wslots)
+                wslots.remove(oldest)
+                stall = max(0.0, oldest - now)
+            done = self.channels.read(page, now + stall)
+            wslots.append(done)
+            ev = self.cache.insert(page, True)
+            self._handle_evict(ev, now)
+            self._maybe_promote(page, now)
+            lat = stall + base + cfg.cache_index_ns + cfg.ssd_dram_ns
+            return lat, None, "ssd_w"
+
+        # ---- read ----
+        if self.log is not None and self.log.lookup(page, line):
+            self._maybe_promote(page, now)
+            return base + cfg.log_index_ns + cfg.ssd_dram_ns, None, "hit_log"
+        if self.cache.lookup(page) is not None:
+            self._maybe_promote(page, now)
+            return base + cfg.cache_index_ns + cfg.ssd_dram_ns, None, "hit_cache"
+        # SSD DRAM miss -> flash
+        if cfg.enable_ctx_switch:
+            est = self.channels.estimate(page, now)
+            if est > cfg.ctx_threshold_ns:
+                done = self.channels.read(page, now)
+                ev = self.cache.insert(page, False if self.log is not None else False)
+                self._handle_evict(ev, now)
+                st.ctx_switches += 1
+                self._maybe_promote(page, now)
+                return 0.0, done, "switched"
+        done = self.channels.read(page, now)
+        ev = self.cache.insert(page, False)
+        self._handle_evict(ev, now)
+        self._maybe_promote(page, now)
+        lat = (done - now) + base + cfg.cache_index_ns + cfg.ssd_dram_ns
+        return lat, None, "miss_flash"
+
+
+_CLS_LAT = ("host_r", "host_w", "hit_log", "hit_cache", "miss_flash", "ssd_w")
+
+
+def simulate(
+    workload: str,
+    variant: str,
+    cfg: SimConfig = SimConfig(),
+    total_req: int = 400_000,
+    seed: int = 0,
+    n_threads: int = 0,
+) -> Dict[str, Any]:
+    """Run one (workload, variant) experiment; returns a stats dict.
+
+    ``total_req`` is the total work of the program, split evenly across the
+    variant's thread count (the paper runs the same program with 8 or 24
+    threads; more threads never means more work). ``n_threads`` overrides
+    the variant default (thread-scaling studies, Fig 15/22).
+    """
+    cfg = cfg.variant(variant)
+    if n_threads:
+        cfg = __import__("dataclasses").replace(cfg, n_threads=n_threads)
+    n_req = max(total_req // cfg.n_threads, 1)
+    traces = gen_traces(workload, cfg.n_threads, n_req, seed=seed, scale=cfg.scale)
+    threads = [Thread(t, tr) for t, tr in enumerate(traces)]
+    m = Machine(cfg, seed)
+    st = m.stats
+    n_cores = cfg.n_cores
+    cores = [0.0] * n_cores
+    wslots_per_core: List[List[float]] = [[] for _ in range(n_cores)]
+    policy = cfg.sched_policy
+    sched_counter = 0
+    pending = set(range(len(threads)))
+
+    def record(cls: str, lat: float) -> None:
+        st.n += 1
+        st.lat_sum += lat
+        if cls == "host_r":
+            st.host_r += 1
+            st.lat_host += lat
+        elif cls == "host_w":
+            st.host_w += 1
+            st.lat_host += lat
+        elif cls == "hit_log":
+            st.hit_log += 1
+            st.lat_hit += lat
+        elif cls == "hit_cache":
+            st.hit_cache += 1
+            st.lat_hit += lat
+        elif cls == "ssd_w":
+            st.ssd_w += 1
+            st.lat_hit += lat
+        else:
+            st.miss_flash += 1
+            st.lat_miss += lat
+
+    while pending:
+        # core with the earliest time
+        c = min(range(n_cores), key=cores.__getitem__)
+        t_now = cores[c]
+        cand = [th for ti, th in enumerate(threads)
+                if ti in pending and not th.running and th.ready <= t_now]
+        if not cand:
+            waits = [threads[ti].ready for ti in pending if not threads[ti].running]
+            if not waits:  # all pending threads running on other cores
+                cores[c] = min(x for x in cores if x > t_now) if any(
+                    x > t_now for x in cores) else t_now + 1.0
+                continue
+            cores[c] = max(t_now, min(waits))
+            continue
+        if policy == "CFS":
+            th = min(cand, key=lambda x: x.vruntime)
+        elif policy == "RANDOM":
+            th = m.rng.choice(cand)
+        else:  # RR
+            th = min(cand, key=lambda x: x.last_sched)
+        sched_counter += 1
+        th.last_sched = sched_counter
+        th.running = True
+        t = max(t_now, th.ready)
+        t0 = t
+
+        page_a, line_a, write_a, gap_a = th.page, th.line, th.write, th.gap
+        i, n = th.i, th.n
+        serve = m.serve
+        wslots = wslots_per_core[c]
+        blocked = False
+        if th.replay:  # replayed access after a context switch (§III-A 4)
+            th.replay = False
+            lat = cfg.cxl_protocol_ns + cfg.cache_index_ns + cfg.ssd_dram_ns
+            t += lat
+            record("hit_cache", lat)
+            st.replays += 1
+            i += 1
+        while i < n:
+            t += gap_a[i]
+            lat, blocked_until, cls = serve(int(page_a[i]), int(line_a[i]),
+                                            bool(write_a[i]), t, wslots)
+            if blocked_until is not None:
+                th.ready = blocked_until
+                th.replay = True
+                t += cfg.ctx_switch_ns  # core-side switch cost
+                blocked = True
+                break
+            t += lat
+            record(cls, lat)
+            i += 1
+        th.i = i
+        th.vruntime += t - t0
+        th.running = False
+        if i >= n and not th.replay:
+            th.done = True
+            pending.discard(th.tid)
+        cores[c] = t
+
+    exec_ns = max(cores)
+    st.exec_ns = exec_ns
+    st.busy_ns = m.channels.busy_ns
+    st.gc_events = m.channels.gc_events
+    out = st.as_dict()
+    out.update(
+        workload=workload, variant=variant, n_threads=cfg.n_threads,
+        n_req_per_thread=n_req,
+        total_req=st.n,
+        throughput_rps=st.n / max(exec_ns, 1e-9) * 1e9,
+        ssd_bw_util=m.channels.busy_ns / max(exec_ns * cfg.n_channels, 1e-9),
+        flash_reads=m.channels.reads, flash_writes=m.channels.writes,
+        compactions=(m.log.compactions if m.log else 0),
+        coalesce_ratio=(
+            m.log.flushed_lines * LINE / max(m.log.flushed_pages * PAGE, 1)
+            if m.log else None
+        ),
+    )
+    return out

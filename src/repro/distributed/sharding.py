@@ -1,0 +1,95 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, but tiny).
+
+Parameters carry logical axis names in their schema (models/common.py).
+This module translates them to PartitionSpecs for a concrete mesh, with a
+divisibility check: a logical rule is dropped (replicated) when the dim is
+not divisible by the mesh axis size — this is what makes one rule set work
+across all 10 assigned archs (e.g. 40 q-heads do not divide a 16-wide model
+axis; the flattened head dim usually does).
+
+Default rules (2D: FSDP on "data" x TP/EP on "model"):
+    vocab   -> model        embed -> data (FSDP)
+    heads   -> model        kv    -> model
+    ffn     -> model        inner -> model
+    experts -> model (EP)   layers/None -> replicated
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common
+
+Pytree = Any
+
+DEFAULT_RULES: Dict[str, Any] = {
+    "layers": None,
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv": "model",
+    "ffn": "model",
+    "inner": "model",
+    "experts": "model",
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for_leaf(leaf: common.Leaf, mesh: Mesh, rules=None) -> P:
+    rules = rules or DEFAULT_RULES
+    entries = []
+    for dim, logical in zip(leaf.shape, leaf.axes):
+        mesh_axis = rules.get(logical) if logical is not None else None
+        if mesh_axis is not None and (
+            mesh_axis not in mesh.shape or dim % _axis_size(mesh, mesh_axis) != 0
+        ):
+            mesh_axis = None  # divisibility fallback: replicate this dim
+        entries.append(mesh_axis)
+    return P(*entries)
+
+
+def param_specs(schema: Pytree, mesh: Mesh, rules=None) -> Pytree:
+    """PartitionSpec tree matching the schema tree."""
+    return jax.tree_util.tree_map(
+        lambda l: spec_for_leaf(l, mesh, rules), schema, is_leaf=common.is_leaf
+    )
+
+
+def param_shardings(schema: Pytree, mesh: Mesh, rules=None) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(schema, mesh, rules)
+    )
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Global batch dim over every data-parallel axis present."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if axes else None)
+
+
+def filter_spec_for_mesh(spec: P, mesh: Mesh, shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Drop axis names a mesh doesn't have (and non-divisible dims if shape
+    given) from a PartitionSpec — lets one spec serve both mesh variants."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(n for n in names if n in mesh.shape)
+        if shape is not None and names:
+            size = int(np.prod([mesh.shape[n] for n in names]))
+            if shape[i] % size != 0:
+                names = ()
+        out.append(names if len(names) > 1 else (names[0] if names else None))
+    return P(*out)

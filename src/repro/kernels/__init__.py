@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the SkyByte tiering runtime's compute hot spots.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + BlockSpec TPU implementation
+  ops.py    — jitted dispatch wrapper (``use_pallas`` flag; interpret=True
+              executes the kernel body on CPU for validation)
+  ref.py    — pure-jnp oracle
+
+Kernels:
+  paged_attention — decode attention over the paged HBM KV cache + the
+                    token-granular write log (the paper's parallel
+                    log+cache lookup, SIII-B read path)
+  kv_log_append   — token append into the KV write-log ring (write path)
+  log_compact     — newest-wins coalescing of log tokens into KV pages
+                    (SIII-B log compaction)
+  flash_attention — tiled causal attention for prefill (MXU-aligned)
+"""

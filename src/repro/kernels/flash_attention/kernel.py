@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: tiled causal flash attention (prefill hot path).
+
+Grid = (B, H, n_q_blocks, n_k_blocks); k-block axis is minor-most so the
+online-softmax state is carried in VMEM scratch across k steps. Causal
+blocks that are fully masked are skipped with pl.when (no MXU work).
+Block shapes (block_q x hd) / (block_k x hd) are (128, 128)-aligned for
+the MXU; fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, block_q, 1, hd)
+    k_ref,  # (1, block_k, 1, hd)
+    v_ref,
+    out_ref,  # (1, block_q, 1, hd)
+    acc,  # (block_q, hd) f32
+    m_scr,  # (block_q, 1)
+    l_scr,  # (block_q, 1)
+    *,
+    block_q: int,
+    block_k: int,
+    n_k: int,
+    causal: bool,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    run = True
+    if causal:
+        run = ik * block_k <= iq * block_q + block_q - 1
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, :, 0].astype(jnp.float32)
+        k = k_ref[0, :, 0].astype(jnp.float32)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        hd = q.shape[-1]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) / jnp.sqrt(1.0 * hd)
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            kpos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_cur
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        out_ref[0, :, 0] = (acc[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            out_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S_kv, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    S_kv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S_kv)
+    assert S % block_q == 0 and S_kv % block_k == 0, (S, S_kv, block_q, block_k)
+    n_q, n_k = S // block_q, S_kv // block_k
+
+    grid = (B, H, n_q, n_k)
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, n_k=n_k, causal=causal
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec(
+                (1, block_k, 1, hd), lambda b, h, iq, ik: (b, ik, h // g, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, hd), lambda b, h, iq, ik: (b, ik, h // g, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,26 @@
+"""Dispatch wrapper for the prefill flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    use_pallas: bool = True,
+    interpret: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    if not use_pallas:
+        return flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )

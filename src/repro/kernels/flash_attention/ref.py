@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: causal (or full) GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S_kv, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, S, KV, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(1.0 * hd)
+    if causal:
+        S_kv = k.shape[1]
+        mask = jnp.arange(S_kv)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

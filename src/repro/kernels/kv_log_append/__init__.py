@@ -1,0 +1,1 @@
+from repro.kernels.kv_log_append.ops import kv_log_append  # noqa: F401

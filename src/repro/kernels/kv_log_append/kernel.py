@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: KV write-log append (decode write path).
+
+Grid over layers; the whole per-layer log block stays in ANY/HBM-resident
+ref and the B new tokens are stored at the (scalar-prefetched) tail with a
+dynamic slice — on TPU this is a single VMEM->HBM DMA per layer, no
+read-modify-write of the surrounding log (the paper's cacheline append:
+no page fetch on the critical write path). Aliased in/out for in-place
+update.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tail_ref, knew_ref, vnew_ref, logk_ref, logv_ref, logk_out, logv_out):
+    # in/out aliased: only the appended rows are written
+    tail = tail_ref[0]
+    B = knew_ref.shape[1]
+    logk_out[0, pl.dslice(tail, B)] = knew_ref[0]
+    logv_out[0, pl.dslice(tail, B)] = vnew_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_log_append_pallas(
+    log_k: jax.Array,  # (L, S, KV, hd)
+    log_v: jax.Array,
+    log_meta: jax.Array,  # (S, 2)
+    tail: jax.Array,  # ()
+    k_new: jax.Array,  # (L, B, KV, hd)
+    v_new: jax.Array,
+    req_ids: jax.Array,
+    positions: jax.Array,
+    *,
+    interpret: bool = True,
+):
+    L, S, KV, hd = log_k.shape
+    B = k_new.shape[1]
+    tail_arr = jnp.reshape(tail, (1,)).astype(jnp.int32)
+
+    new_k, new_v = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(L,),
+            in_specs=[
+                pl.BlockSpec((1, B, KV, hd), lambda l, t: (l, 0, 0, 0)),
+                pl.BlockSpec((1, B, KV, hd), lambda l, t: (l, 0, 0, 0)),
+                pl.BlockSpec((1, S, KV, hd), lambda l, t: (l, 0, 0, 0)),
+                pl.BlockSpec((1, S, KV, hd), lambda l, t: (l, 0, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, S, KV, hd), lambda l, t: (l, 0, 0, 0)),
+                pl.BlockSpec((1, S, KV, hd), lambda l, t: (l, 0, 0, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(log_k.shape, log_k.dtype),
+            jax.ShapeDtypeStruct(log_v.shape, log_v.dtype),
+        ],
+        input_output_aliases={3: 0, 4: 1},  # log_k/log_v aliased (in-place)
+        interpret=interpret,
+    )(tail_arr, k_new, v_new, log_k, log_v)
+
+    meta_new = jnp.stack([req_ids, positions], axis=-1)
+    log_meta = jax.lax.dynamic_update_slice_in_dim(log_meta, meta_new, tail, axis=0)
+    return new_k, new_v, log_meta, tail + B

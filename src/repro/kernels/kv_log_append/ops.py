@@ -1,0 +1,21 @@
+"""Dispatch wrapper for the KV log append kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.kv_log_append.kernel import kv_log_append_pallas
+from repro.kernels.kv_log_append.ref import kv_log_append_ref
+
+
+def kv_log_append(
+    log_k, log_v, log_meta, tail, k_new, v_new, req_ids, positions,
+    *, use_pallas: bool = True, interpret: bool = True,
+):
+    if not use_pallas:
+        return kv_log_append_ref(
+            log_k, log_v, log_meta, tail, k_new, v_new, req_ids, positions
+        )
+    return kv_log_append_pallas(
+        log_k, log_v, log_meta, tail, k_new, v_new, req_ids, positions,
+        interpret=interpret,
+    )

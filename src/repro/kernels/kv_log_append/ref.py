@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: append a batch of decode tokens into the KV write log.
+
+log_k/log_v: (L, S, KV, hd) ring buffers (all layers), log_meta: (S, 2)
+(request, abs_pos), tail: () int32. Appends B tokens (one per request in
+``req_ids`` at position ``positions``) contiguously at the tail. The
+caller guarantees tail + B <= S (the engine compacts before overflow —
+the paper's double-buffered swap).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_log_append_ref(
+    log_k: jax.Array,  # (L, S, KV, hd)
+    log_v: jax.Array,
+    log_meta: jax.Array,  # (S, 2) int32
+    tail: jax.Array,  # () int32
+    k_new: jax.Array,  # (L, B, KV, hd)
+    v_new: jax.Array,
+    req_ids: jax.Array,  # (B,) int32
+    positions: jax.Array,  # (B,) int32
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    B = k_new.shape[1]
+    log_k = jax.lax.dynamic_update_slice_in_dim(log_k, k_new, tail, axis=1)
+    log_v = jax.lax.dynamic_update_slice_in_dim(log_v, v_new, tail, axis=1)
+    meta_new = jnp.stack([req_ids, positions], axis=-1)
+    log_meta = jax.lax.dynamic_update_slice_in_dim(log_meta, meta_new, tail, axis=0)
+    return log_k, log_v, log_meta, tail + B

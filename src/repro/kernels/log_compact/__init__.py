@@ -1,0 +1,1 @@
+from repro.kernels.log_compact.ops import log_compact  # noqa: F401

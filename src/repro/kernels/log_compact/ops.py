@@ -1,0 +1,16 @@
+"""Dispatch wrapper for log compaction."""
+from __future__ import annotations
+
+from repro.kernels.log_compact.kernel import log_compact_pallas
+from repro.kernels.log_compact.ref import log_compact_ref
+
+
+def log_compact(
+    k_pages, v_pages, log_k, log_v, log_meta, flush_targets,
+    *, use_pallas: bool = True, interpret: bool = True,
+):
+    if not use_pallas:
+        return log_compact_ref(k_pages, v_pages, log_k, log_v, log_meta, flush_targets)
+    return log_compact_pallas(
+        k_pages, v_pages, log_k, log_v, log_meta, flush_targets, interpret=interpret
+    )

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle: write-log compaction (coalesce log tokens into pages).
+
+For each flush target f (request r, logical page p, pool slot s), every
+log entry whose (request, abs_pos // page_size) matches (r, p) is written
+into page-pool slot s at offset abs_pos % page_size. Later log slots win
+(newest-wins — with append-only KV there are no conflicts, but the
+semantics match the paper's log compaction exactly).
+
+flush_targets: (F, 3) int32 rows (request, logical_page, pool_slot);
+request = -1 padding rows are ignored. PRECONDITION (engine-guaranteed):
+rows reference distinct (request, logical_page) pairs and distinct pool
+slots — duplicate slots would be order-dependent.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def log_compact_ref(
+    k_pages: jax.Array,  # (L, P, page, KV, hd)
+    v_pages: jax.Array,
+    log_k: jax.Array,  # (L, S, KV, hd)
+    log_v: jax.Array,
+    log_meta: jax.Array,  # (S, 2)
+    flush_targets: jax.Array,  # (F, 3)
+) -> Tuple[jax.Array, jax.Array]:
+    L, P, page, KV, hd = k_pages.shape
+    S = log_k.shape[1]
+    owner, lpos = log_meta[:, 0], log_meta[:, 1]
+
+    def one_target(carry, tgt):
+        kp, vp = carry
+        r, logical, slot = tgt[0], tgt[1], tgt[2]
+        match = (owner == r) & (r >= 0) & (lpos >= 0) & (lpos // page == logical)
+        offs = jnp.where(match, lpos % page, page)  # page = scratch row
+        # scatter (with a discard row at index `page`)
+        def per_layer(kp_l, vp_l, lk_l, lv_l):
+            buf_k = jnp.zeros((page + 1, KV, hd), kp_l.dtype)
+            buf_v = jnp.zeros((page + 1, KV, hd), vp_l.dtype)
+            wrote = jnp.zeros((page + 1,), bool).at[offs].set(True)[:page]
+            buf_k = buf_k.at[offs].set(lk_l.astype(kp_l.dtype))[:page]
+            buf_v = buf_v.at[offs].set(lv_l.astype(vp_l.dtype))[:page]
+            old_k = kp_l[jnp.maximum(slot, 0)]
+            old_v = vp_l[jnp.maximum(slot, 0)]
+            merged_k = jnp.where(wrote[:, None, None], buf_k, old_k)
+            merged_v = jnp.where(wrote[:, None, None], buf_v, old_v)
+            kp_l = kp_l.at[jnp.maximum(slot, 0)].set(
+                jnp.where(r >= 0, merged_k, old_k)
+            )
+            vp_l = vp_l.at[jnp.maximum(slot, 0)].set(
+                jnp.where(r >= 0, merged_v, old_v)
+            )
+            return kp_l, vp_l
+
+        kp, vp = jax.vmap(per_layer)(kp, vp, log_k, log_v)
+        return (kp, vp), ()
+
+    (k_pages, v_pages), _ = jax.lax.scan(one_target, (k_pages, v_pages), flush_targets)
+    return k_pages, v_pages

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: decode attention over a paged KV pool.
+
+Flash-decoding schedule: grid = (B, KV_heads, N_pages); the page axis is
+the sequential minor-most grid dimension, so the online-softmax state
+(m, l, acc) lives in VMEM scratch and is carried across page steps.
+The page table and lengths ride in SMEM via PrefetchScalarGridSpec, and
+each k/v page block is streamed HBM->VMEM by the BlockSpec index_map
+*through the page table* — non-resident pages (slot -1) are masked, never
+fetched twice (the paper's MSHR-free parallel lookup, adapted: the page
+table here plays the role of SkyByte's two-level index).
+
+Block shapes: (page_size, head_dim) tiles — page_size x hd multiples of
+(8, 128) keep the MXU/VPU aligned; fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar prefetch
+    page_table,  # (B, N) int32 in SMEM
+    lengths,  # (B,) int32 in SMEM
+    # blocks
+    q_ref,  # (1, 1, g, hd)
+    k_ref,  # (1, page, 1, hd)
+    v_ref,  # (1, page, 1, hd)
+    out_ref,  # (1, 1, g, hd)
+    m_ref,  # (1, 1, g, 1) fp32 running max (output)
+    l_ref,  # (1, 1, g, 1) fp32 running denom (output)
+    # scratch
+    acc,  # (g, hd) fp32
+    m_scr,  # (g, 1) fp32
+    l_scr,  # (g, 1) fp32
+    *,
+    page: int,
+    n_pages: int,
+):
+    b = pl.program_id(0)
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+    hd = q.shape[-1]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) / jnp.sqrt(1.0 * hd)  # (g, page)
+
+    pos = n * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    resident = page_table[b, n] >= 0
+    valid = (pos < lengths[b]) & resident
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (g, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)  # (g, page)
+    l_cur = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc[...] = acc[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+
+    @pl.when(n == n_pages - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        out_ref[0, 0] = (acc[...] / denom).astype(out_ref.dtype)
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(
+    q: jax.Array,  # (B, H, hd)
+    k_pages: jax.Array,  # (P, page, KV, hd)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, N) int32
+    lengths: jax.Array,  # (B,) int32
+    *,
+    interpret: bool = True,
+):
+    """Returns (out (B, H, hd), m (B, KV, g, 1), l (B, KV, g, 1))."""
+    B, H, hd = q.shape
+    P, page, KV, _ = k_pages.shape
+    N = page_table.shape[1]
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd)
+
+    grid = (B, KV, N)
+
+    def qmap(b, kv, n, pt, ln):
+        return (b, kv, 0, 0)
+
+    def kvmap(b, kv, n, pt, ln):
+        return (jnp.maximum(pt[b, n], 0), 0, kv, 0)
+
+    def omap(b, kv, n, pt, ln):
+        return (b, kv, 0, 0)
+
+    kernel = functools.partial(_kernel, page=page, n_pages=N)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), qmap),
+                pl.BlockSpec((1, page, 1, hd), kvmap),
+                pl.BlockSpec((1, page, 1, hd), kvmap),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, g, hd), omap),
+                pl.BlockSpec((1, 1, g, 1), omap),
+                pl.BlockSpec((1, 1, g, 1), omap),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((g, hd), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, KV, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, H, hd), m, l

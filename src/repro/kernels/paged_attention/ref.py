@@ -1,0 +1,83 @@
+"""Pure-jnp oracle for paged decode attention with write-log merge.
+
+Semantics (one decode step, GQA):
+  q:          (B, H, hd)
+  k_pages:    (P, page, KV, hd)  HBM page pool (shared across requests)
+  v_pages:    (P, page, KV, hd)
+  page_table: (B, N) int32 — page-pool slot of request b's n-th logical
+              page; -1 = not resident (masked; the serving scheduler
+              guarantees residency for scheduled requests)
+  lengths:    (B,) int32 — valid tokens per request
+  log_k/v:    (S, KV, hd) — token-granular write log (ring)
+  log_meta:   (S, 2) int32 — (request, abs_pos) per slot; request = -1 empty
+
+A logical position covered by BOTH a page and a log entry takes the LOG
+value (newest-wins: the log holds tokens not yet compacted into pages).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    log_k: Optional[jax.Array] = None,
+    log_v: Optional[jax.Array] = None,
+    log_meta: Optional[jax.Array] = None,
+    page_lengths: Optional[jax.Array] = None,
+    req_ids: Optional[jax.Array] = None,
+) -> jax.Array:
+    B, H, hd = q.shape
+    P, page, KV, _ = k_pages.shape
+    N = page_table.shape[1]
+    g = H // KV
+    if page_lengths is None:
+        page_lengths = lengths
+    if req_ids is None:
+        req_ids = jnp.arange(B, dtype=jnp.int32)  # batch row b serves request b
+
+    safe_table = jnp.maximum(page_table, 0)
+    k = k_pages[safe_table]  # (B, N, page, KV, hd)
+    v = v_pages[safe_table]
+    k = k.reshape(B, N * page, KV, hd)
+    v = v.reshape(B, N * page, KV, hd)
+    pos = jnp.arange(N * page)[None]  # (1, S_pages)
+    resident = jnp.repeat(page_table >= 0, page, axis=1)  # (B, N*page)
+    valid = (pos < page_lengths[:, None]) & resident
+
+    if log_k is not None:
+        S = log_k.shape[0]
+        owner = log_meta[:, 0]  # (S,)
+        lpos = log_meta[:, 1]
+        # mask page entries shadowed by a log entry for the same (req, pos)
+        shadow = jnp.zeros((B, N * page), bool)
+        match = (owner[None, :] == req_ids[:, None]) & (owner[None, :] >= 0) & (
+            req_ids[:, None] >= 0
+        )
+        # for each request: mark positions present in the log
+        onehot = jnp.where(
+            match, jnp.where(lpos[None, :] >= 0, lpos[None, :], N * page), N * page
+        )  # (B, S) -> position or sentinel
+        shadow = jax.vmap(
+            lambda oh: jnp.zeros((N * page + 1,), bool).at[oh].set(True)[:-1]
+        )(onehot)
+        valid = valid & ~shadow
+        log_valid = match & (lpos[None, :] < lengths[:, None]) & (lpos[None, :] >= 0)
+        k = jnp.concatenate([k, jnp.broadcast_to(log_k[None], (B, S, KV, hd))], 1)
+        v = jnp.concatenate([v, jnp.broadcast_to(log_v[None], (B, S, KV, hd))], 1)
+        valid = jnp.concatenate([valid, log_valid], 1)
+
+    qg = q.reshape(B, KV, g, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w.astype(jnp.float32), v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

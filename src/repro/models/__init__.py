@@ -1,0 +1,1 @@
+from repro.models.api import ModelSpec, spec_for  # noqa: F401

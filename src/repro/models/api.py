@@ -1,0 +1,183 @@
+"""Unified model API — one facade over the six family implementations.
+
+ModelSpec(cfg) provides:
+    schema() / init(rng) / abstract_params()
+    loss(params, batch)                      — next-token CE (+ MoE aux)
+    forward / prefill / decode_step
+    input_specs(shape)                       — ShapeDtypeStruct stand-ins for
+                                               every input of the lowered step
+    cache_specs / init_cache / cache_pspec   — decode-state handling
+
+Step builders (train_step / prefill_step / serve_step) live in
+repro.launch.steps so that distribution concerns stay out of model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common, dense, encdec, mamba2, rwkv6
+
+Pytree = Any
+
+_FAMILY = {
+    "dense": dense,
+    "moe": dense,
+    "vlm": dense,
+    "encdec": encdec,
+    "ssm": rwkv6,
+    "hybrid": mamba2,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    cfg: ModelConfig
+
+    @property
+    def mod(self):
+        return _FAMILY[self.cfg.family]
+
+    # ---- parameters ----
+    def schema(self) -> Pytree:
+        return self.mod.schema(self.cfg)
+
+    def init(self, rng: jax.Array) -> Pytree:
+        return common.init_params(rng, self.schema())
+
+    def abstract_params(self) -> Pytree:
+        return common.abstract_params(self.schema())
+
+    def param_count(self) -> int:
+        return common.param_count(self.schema())
+
+    # ---- compute ----
+    def forward(self, params, tokens, frontend=None, *, remat=True, **kw):
+        return self.mod.forward(self.cfg, params, tokens, frontend, remat=remat, **kw)
+
+    def loss(self, params, batch: Dict[str, jax.Array], *, remat: bool = True):
+        """Mean next-token cross entropy. Returns (loss, metrics)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        logits, aux, _ = self.forward(
+            params, tokens, batch.get("frontend"), remat=remat
+        )
+        nf = cfg.n_frontend_tokens if cfg.family == "vlm" else 0
+        if nf:
+            # logits at frontend positions [nf-1, nf+S-1) predict the S text tokens
+            pred = jax.lax.dynamic_slice_in_dim(logits, nf - 1, tokens.shape[1], axis=1)
+            targets = tokens
+        else:
+            pred = logits[:, :-1]
+            targets = tokens[:, 1:]
+        logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        ce = -jnp.mean(ll)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+    def prefill(self, params, tokens, frontend=None):
+        """Full-context forward collecting decode state. Returns
+        (last_logits (B, V), cache)."""
+        logits, _, collected = self.forward(
+            params, tokens, frontend, remat=False, collect_kv=True,
+            unembed_last_only=True,
+        )
+        S = tokens.shape[1]
+        cache = self._assemble_cache(collected, S)
+        return logits[:, -1], cache
+
+    def _assemble_cache(self, collected, S: int) -> Dict[str, jax.Array]:
+        fam = self.cfg.family
+        length = jnp.int32(S)
+        if fam in ("dense", "moe", "vlm"):
+            k, v = collected
+            return {"k": k, "v": v, "length": length}
+        if fam == "encdec":
+            k, v, ck, cv = collected
+            return {"k": k, "v": v, "ck": ck, "cv": cv, "length": length}
+        if fam == "ssm":
+            tm, cm, st = collected
+            return {"wkv": st, "tm_prev": tm, "cm_prev": cm, "length": length}
+        if fam == "hybrid":
+            if self.cfg.shared_attn_every:
+                conv, ssm, ak, av = collected
+                return {"conv": conv, "ssm": ssm, "attn_k": ak, "attn_v": av,
+                        "length": length}
+            conv, ssm = collected
+            return {"conv": conv, "ssm": ssm, "length": length}
+        raise ValueError(fam)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return self.mod.decode_step(self.cfg, params, cache, tokens, pos)
+
+    # ---- decode cache ----
+    def cache_specs(self, batch: int, max_len: int):
+        return self.mod.cache_specs(self.cfg, batch, max_len)
+
+    def init_cache(self, batch: int, max_len: int):
+        return self.mod.init_cache(self.cfg, batch, max_len)
+
+    def cache_pspec(self):
+        spec = self.mod.cache_pspec()
+        if self.cfg.family == "hybrid" and not self.cfg.shared_attn_every:
+            spec = {k: v for k, v in spec.items() if not k.startswith("attn_")}
+        return spec
+
+    # ---- input specs (dry-run stand-ins; no allocation) ----
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        d = cfg.d_model
+        specs: Dict[str, Any] = {}
+        if shape.kind == "train":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            if cfg.family == "vlm":
+                specs["frontend"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_frontend_tokens, d), jnp.bfloat16
+                )
+            elif cfg.family == "encdec":
+                specs["frontend"] = jax.ShapeDtypeStruct((B, S // 4, d), jnp.bfloat16)
+        elif shape.kind == "prefill":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            if cfg.family == "vlm":
+                specs["frontend"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_frontend_tokens, d), jnp.bfloat16
+                )
+            elif cfg.family == "encdec":
+                specs["frontend"] = jax.ShapeDtypeStruct((B, S // 4, d), jnp.bfloat16)
+        elif shape.kind == "decode":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+            specs["pos"] = jax.ShapeDtypeStruct((), i32)
+            specs["cache"] = self.cache_specs(B, S)
+        else:
+            raise ValueError(shape.kind)
+        return specs
+
+    # ---- smoke-test helpers ----
+    def smoke_batch(self, rng, batch: int = 2, seq: int = 32) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        r1, r2 = jax.random.split(rng)
+        out = {"tokens": jax.random.randint(r1, (batch, seq), 0, cfg.vocab, jnp.int32)}
+        if cfg.family == "vlm":
+            out["frontend"] = jax.random.normal(
+                r2, (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16
+            )
+        elif cfg.family == "encdec":
+            out["frontend"] = jax.random.normal(
+                r2, (batch, max(seq // 4, 1), cfg.d_model), jnp.bfloat16
+            )
+        return out
+
+
+def spec_for(arch_or_cfg) -> ModelSpec:
+    if isinstance(arch_or_cfg, ModelConfig):
+        return ModelSpec(arch_or_cfg)
+    from repro.configs import get_config
+
+    return ModelSpec(get_config(arch_or_cfg))

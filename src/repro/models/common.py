@@ -1,0 +1,111 @@
+"""Parameter schema system — single source of truth for parameter shapes,
+logical sharding axes, and initialization.
+
+Every model family defines ``schema(cfg) -> nested dict of Leaf``. From the
+schema we derive:
+  * ``init(rng)``            — concrete parameters (smoke tests, examples)
+  * ``abstract(schema)``     — ShapeDtypeStruct tree (dry-run lowering)
+  * ``pspecs(schema, mesh)`` — PartitionSpec tree (see distributed/sharding.py)
+
+Per-layer parameters are STACKED along a leading "layers" axis so models scan
+over depth (keeps HLO size O(1) in depth — mandatory for the 88-layer archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+# Logical axis vocabulary (mapped to mesh axes in distributed/sharding.py):
+#   "layers"  — stacked depth (never sharded)
+#   "vocab"   — vocabulary dim           -> model axis
+#   "embed"   — residual stream dim      -> data axis (FSDP)
+#   "heads"   — flattened q_heads*hd     -> model axis
+#   "kv"      — flattened kv_heads*hd    -> model axis
+#   "ffn"     — MLP hidden dim           -> model axis
+#   "inner"   — SSM inner dim            -> model axis
+#   "experts" — MoE expert dim           -> model axis (EP)
+#   None      — replicated
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # "normal" | "zeros" | "ones"
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(rng: jax.Array, leaf: Leaf) -> jax.Array:
+    dtype = jnp.dtype(leaf.dtype)
+    if leaf.init == "zeros":
+        return jnp.zeros(leaf.shape, dtype)
+    if leaf.init == "ones":
+        return jnp.ones(leaf.shape, dtype)
+    if leaf.init == "normal":
+        # fan_in = last dim unless 1-D; stacked layer dim excluded.
+        dims = [d for d, a in zip(leaf.shape, leaf.axes) if a != "layers"]
+        fan_in = dims[0] if len(dims) > 1 else dims[-1]
+        scale = leaf.scale if leaf.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (scale * jax.random.normal(rng, leaf.shape, jnp.float32)).astype(dtype)
+    raise ValueError(leaf.init)
+
+
+def is_leaf(x: Any) -> bool:
+    return isinstance(x, Leaf)
+
+
+def init_params(rng: jax.Array, schema: Pytree) -> Pytree:
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=is_leaf)
+    rngs = jax.random.split(rng, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [_leaf_init(r, l) for r, l in zip(rngs, leaves)]
+    )
+
+
+def abstract_params(schema: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.dtype(l.dtype)),
+        schema,
+        is_leaf=is_leaf,
+    )
+
+
+def param_axes(schema: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda l: l.axes, schema, is_leaf=is_leaf)
+
+
+def param_count(schema: Pytree) -> int:
+    leaves = jax.tree_util.tree_leaves(schema, is_leaf=is_leaf)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def stacked(n_layers: int, shape: Tuple[int, ...], axes, **kw) -> Leaf:
+    """A per-layer parameter stacked along the scan (depth) axis."""
+    return Leaf((n_layers, *shape), ("layers", *axes), **kw)
+
+
+# ---------------------------------------------------------------------------
+# misc numeric helpers shared by model files
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(vocab: int, multiple: int = 256) -> int:
+    """Vocab padded for clean TP sharding (MaxText-style)."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def take_layer(stacked_tree: Pytree, i) -> Pytree:
+    """Dynamic-slice layer i out of a stacked parameter tree."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False), stacked_tree
+    )

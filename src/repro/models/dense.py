@@ -1,0 +1,252 @@
+"""Decoder-only transformer: families "dense", "moe", "vlm".
+
+vlm = dense backbone + stub vision frontend (precomputed patch embeddings are
+an *input*, projected and prepended to the token sequence).
+moe = dense with the FFN replaced by a top-k expert layer (EP over "model").
+
+All per-layer parameters are stacked on a leading "layers" axis and the
+forward pass is a single ``lax.scan`` (+ optional remat) — HLO size is O(1)
+in depth, which keeps 88-layer × 512-device dry-run compiles tractable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Leaf, stacked
+from repro.models.layers import (
+    AttnParams,
+    use_weight,
+    chunked_attention,
+    decode_attention,
+    moe_ffn,
+    project_qkv,
+    rmsnorm,
+    shard_hint,
+)
+
+Pytree = Any
+
+
+def schema(cfg: ModelConfig) -> Dict[str, Any]:
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    H, KV, F, V = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab
+    s: Dict[str, Any] = {
+        "embed": Leaf((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": Leaf((d,), (None,), init="ones"),
+        "blocks": {
+            "attn_norm": stacked(L, (d,), (None,), init="ones"),
+            "wq": stacked(L, (d, H * hd), ("embed", "heads")),
+            "wk": stacked(L, (d, KV * hd), ("embed", "kv")),
+            "wv": stacked(L, (d, KV * hd), ("embed", "kv")),
+            "wo": stacked(L, (H * hd, d), ("heads", "embed")),
+            "mlp_norm": stacked(L, (d,), (None,), init="ones"),
+        },
+    }
+    b = s["blocks"]
+    if cfg.qkv_bias:
+        b["bq"] = stacked(L, (H * hd,), ("heads",), init="zeros")
+        b["bk"] = stacked(L, (KV * hd,), ("kv",), init="zeros")
+        b["bv"] = stacked(L, (KV * hd,), ("kv",), init="zeros")
+    if cfg.qk_norm:
+        b["q_norm"] = stacked(L, (hd,), (None,), init="ones")
+        b["k_norm"] = stacked(L, (hd,), (None,), init="ones")
+    if cfg.family == "moe":
+        m = cfg.moe
+        E, f = m.num_experts, m.d_ff_expert
+        b["router"] = stacked(L, (d, E), ("embed", None), scale=0.02)
+        b["we_gate"] = stacked(L, (E, d, f), ("experts", "embed", None))
+        b["we_up"] = stacked(L, (E, d, f), ("experts", "embed", None))
+        b["we_down"] = stacked(L, (E, f, d), ("experts", None, "embed"))
+        if m.shared_expert:
+            fs = m.d_ff_shared or F
+            b["ws_gate"] = stacked(L, (d, fs), ("embed", "ffn"))
+            b["ws_up"] = stacked(L, (d, fs), ("embed", "ffn"))
+            b["ws_down"] = stacked(L, (fs, d), ("ffn", "embed"))
+    else:
+        b["w_gate"] = stacked(L, (d, F), ("embed", "ffn"))
+        b["w_up"] = stacked(L, (d, F), ("embed", "ffn"))
+        b["w_down"] = stacked(L, (F, d), ("ffn", "embed"))
+    if not cfg.tie_embeddings:
+        s["lm_head"] = Leaf((d, V), ("embed", "vocab"), scale=0.02)
+    if cfg.frontend is not None:
+        s["frontend_proj"] = Leaf((d, d), ("embed", None), scale=0.02)
+    return s
+
+
+def _attn_params(cfg: ModelConfig, p: Dict[str, jax.Array]) -> AttnParams:
+    return AttnParams(
+        wq=p["wq"],
+        wk=p["wk"],
+        wv=p["wv"],
+        wo=p["wo"],
+        bq=p.get("bq"),
+        bk=p.get("bk"),
+        bv=p.get("bv"),
+        q_norm=p.get("q_norm"),
+        k_norm=p.get("k_norm"),
+    )
+
+
+def _ffn(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array):
+    """Returns (out, aux_loss)."""
+    if cfg.family == "moe":
+        shared = None
+        if cfg.moe.shared_expert:
+            shared = (p["ws_gate"], p["ws_up"], p["ws_down"])
+        return moe_ffn(
+            cfg, x, p["router"], p["we_gate"], p["we_up"], p["we_down"], shared
+        )
+    g = jnp.einsum("bsd,df->bsf", x, use_weight(p["w_gate"], None, "model"))
+    u = jnp.einsum("bsd,df->bsf", x, use_weight(p["w_up"], None, "model"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard_hint(h, ("pod", "data"), None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, use_weight(p["w_down"], "model", None)), jnp.float32(0.0)
+
+
+def _block(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One layer. Returns (x_out, aux_loss, k, v)."""
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = project_qkv(cfg, _attn_params(cfg, p), h, positions)
+    o = chunked_attention(q, k, v, causal=causal)
+    o = o.reshape(*o.shape[:2], -1)
+    x = x + jnp.einsum("bsh,hd->bsd", o, use_weight(p["wo"], "model", None))
+    h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    f, aux = _ffn(cfg, p, h)
+    x = x + f
+    x = shard_hint(x, ("pod", "data"), None, None)
+    return x, aux, k, v
+
+
+def embed_inputs(
+    cfg: ModelConfig,
+    params: Pytree,
+    tokens: jax.Array,  # (B, S)
+    frontend: Optional[jax.Array],  # (B, Sf, d) or None
+) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend is not None and frontend is not None:
+        fe = jnp.einsum("bsd,de->bse", frontend.astype(x.dtype), params["frontend_proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    return shard_hint(x, ("pod", "data"), None, None)
+
+
+def unembed(cfg: ModelConfig, params: Pytree, x: jax.Array) -> jax.Array:
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, use_weight(params["embed"], "model", None))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, use_weight(params["lm_head"], None, "model"))
+    return shard_hint(logits, ("pod", "data"), None, "model")
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Pytree,
+    tokens: jax.Array,
+    frontend: Optional[jax.Array] = None,
+    *,
+    remat: bool = True,
+    collect_kv: bool = False,
+    unembed_last_only: bool = False,
+):
+    """Full-sequence forward. Returns (logits, aux_loss, kv | None).
+
+    kv (if collected): (k, v) each (L, B, S, KV, hd) — the prefill cache.
+    ``unembed_last_only`` skips the (B, S, V) logit tensor (prefill path).
+    """
+    x = embed_inputs(cfg, params, tokens, frontend)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, p_l):
+        x = carry
+        x, aux, k, v = _block(cfg, p_l, x, positions)
+        ys = (k, v) if collect_kv else (aux,)
+        return x, ys
+
+    fn = jax.checkpoint(body) if remat else body
+    x, ys = jax.lax.scan(fn, x, params["blocks"])
+    if unembed_last_only:
+        x = x[:, -1:]
+    logits = unembed(cfg, params, x)
+    if collect_kv:
+        return logits, jnp.float32(0.0), ys
+    return logits, jnp.sum(ys[0]), None
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+        "length": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_pspec():
+    """KV sequence-sharded over "model" (flash-decoding combine via SPMD),
+    batch over ("pod","data") — see DESIGN.md §4."""
+    P = jax.sharding.PartitionSpec
+    return {
+        "k": P(None, ("pod", "data"), "model", None, None),
+        "v": P(None, ("pod", "data"), "model", None, None),
+        "length": P(),
+    }
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Pytree,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,  # (B, 1)
+    pos: jax.Array,  # () int32 — current length (uniform across batch)
+):
+    """One decode step. Returns (logits (B, V), new_cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, 1, d)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+
+    def body(x, xs):
+        p_l, k_c, v_c = xs
+        h = rmsnorm(x, p_l["attn_norm"], cfg.norm_eps)
+        q, k, v = project_qkv(cfg, _attn_params(cfg, p_l), h, positions)
+        k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k, pos, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v, pos, axis=1)
+        o = decode_attention(q, k_c, v_c, pos + 1)
+        o = o.reshape(B, 1, -1)
+        x = x + jnp.einsum("bsh,hd->bsd", o, use_weight(p_l["wo"], "model", None))
+        h = rmsnorm(x, p_l["mlp_norm"], cfg.norm_eps)
+        f, _ = _ffn(cfg, p_l, h)
+        return x + f, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+    logits = unembed(cfg, params, x)[:, 0]
+    new_cache = {"k": k_new, "v": v_new, "length": pos + 1}
+    return logits, new_cache

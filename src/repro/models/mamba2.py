@@ -1,0 +1,398 @@
+"""Mamba2 (SSD) layers + the Zamba2 hybrid (family "hybrid").
+
+Zamba2 = a Mamba2 backbone with one *shared* full-attention block applied
+after every ``shared_attn_every`` Mamba layers (the paper's per-invocation
+LoRA deltas on the shared block are simplified to fully shared weights —
+recorded in DESIGN.md). 81 layers with every=6 gives 13 attention
+invocations + 3 trailing Mamba layers; the forward is an outer scan over
+13 super-blocks (inner scan over 6 Mamba layers, then the shared block) so
+HLO stays O(1) in depth while each attention invocation keeps its own KV
+cache slice.
+
+Mamba2 recurrence (per head h, scalar decay):
+    a_t = exp(-exp(A_log_h) * dt_t)
+    S_t = a_t S_{t-1} + dt_t x_t (x) B_t         state: (P=head_dim, N=state)
+    y_t = C_t . S_t + D_h x_t
+Chunked-parallel evaluation with cumulative log-decay differences (<= 0,
+overflow-free), O(C^2) score matrices per head. fp32 recurrence.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Leaf, stacked
+from repro.models.layers import (
+    AttnParams,
+    use_weight,
+    chunked_attention,
+    decode_attention,
+    project_qkv,
+    rmsnorm,
+    shard_hint,
+    swiglu,
+)
+
+Pytree = Any
+
+
+def _mamba_leaves(cfg: ModelConfig, L: int) -> Dict[str, Leaf]:
+    s = cfg.ssm
+    d = cfg.d_model
+    inner = s.heads * s.head_dim
+    N = s.state_dim
+    return {
+        "norm": stacked(L, (d,), (None,), init="ones"),
+        "w_z": stacked(L, (d, inner), ("embed", "inner")),
+        "w_x": stacked(L, (d, inner), ("embed", "inner")),
+        "w_B": stacked(L, (d, N), ("embed", None)),
+        "w_C": stacked(L, (d, N), ("embed", None)),
+        "w_dt": stacked(L, (d, s.heads), ("embed", None)),
+        "dt_bias": stacked(L, (s.heads,), (None,), init="zeros"),
+        "A_log": stacked(L, (s.heads,), (None,), init="zeros"),
+        "D": stacked(L, (s.heads,), (None,), init="ones"),
+        # depthwise causal conv over (x, B, C) channels, width conv_dim
+        "conv_w": stacked(L, (inner + 2 * N, s.conv_dim), (None, None), scale=0.3),
+        "ln_y": stacked(L, (inner,), (None,), init="ones"),
+        "w_out": stacked(L, (inner, d), ("inner", "embed")),
+    }
+
+
+def schema(cfg: ModelConfig) -> Dict[str, Any]:
+    d, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    H, KV, F = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    s: Dict[str, Any] = {
+        "embed": Leaf((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": Leaf((d,), (None,), init="ones"),
+        "lm_head": Leaf((d, V), ("embed", "vocab"), scale=0.02),
+        "mamba": _mamba_leaves(cfg, L),
+    }
+    if cfg.shared_attn_every:
+        s["shared_attn"] = {
+            "attn_norm": Leaf((d,), (None,), init="ones"),
+            "wq": Leaf((d, H * hd), ("embed", "heads")),
+            "wk": Leaf((d, KV * hd), ("embed", "kv")),
+            "wv": Leaf((d, KV * hd), ("embed", "kv")),
+            "wo": Leaf((H * hd, d), ("heads", "embed")),
+            "mlp_norm": Leaf((d,), (None,), init="ones"),
+            "w_gate": Leaf((d, F), ("embed", "ffn")),
+            "w_up": Leaf((d, F), ("embed", "ffn")),
+            "w_down": Leaf((F, d), ("ffn", "embed")),
+        }
+    return s
+
+
+def _split_counts(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_super_blocks, every, n_trailing)."""
+    every = cfg.shared_attn_every
+    if not every:
+        return 0, 0, cfg.n_layers
+    n_super = cfg.n_layers // every
+    return n_super, every, cfg.n_layers - n_super * every
+
+
+def causal_conv(x: jax.Array, w: jax.Array, prev: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, Ch), w: (Ch, W), prev: (B, W-1, Ch)."""
+    W = w.shape[-1]
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def ssd_chunked(
+    xh: jax.Array,  # (B, S, H, P) fp32 — dt-scaled inputs NOT yet applied
+    dt: jax.Array,  # (B, S, H) fp32 softplus'd
+    loga: jax.Array,  # (B, S, H) <= 0 per-token log decay
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    state0: jax.Array,  # (B, H, P, N)
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), state1)."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    NC = xh.shape[1] // C
+
+    xc = xh.reshape(B, NC, C, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, NC, C, H).transpose(1, 0, 2, 3)
+    lac = loga.reshape(B, NC, C, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(B, NC, C, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(B, NC, C, N).transpose(1, 0, 2, 3)
+
+    idx = jnp.arange(C)
+    lower = idx[:, None] >= idx[None, :]  # j <= i (diagonal included)
+
+    def body(S0, xs):
+        xb, dtb, lab, Bb, Cb = xs  # (B,C,H,P) (B,C,H) (B,C,H) (B,C,N) (B,C,N)
+        cum = jnp.cumsum(lab, axis=1)  # (B,C,H) inclusive
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Ci,Cj,H) <= 0 on mask
+        decay = jnp.where(lower[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", Cb, Bb)  # (B,Ci,Cj) shared across heads
+        dtx = xb * dtb[..., None]  # (B,C,H,P)
+        y = jnp.einsum("bij,bijh,bjhp->bihp", cb, decay, dtx)
+        # initial state: y_i += C_i . (exp(cum_i) S0)
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", Cb, S0, jnp.exp(cum))
+        # state update
+        total = cum[:, -1:, :]  # (B,1,H)
+        w = jnp.exp(total - cum)  # (B,C,H)
+        S1 = jnp.exp(total[:, 0, :, None, None]) * S0 + jnp.einsum(
+            "bjh,bjhp,bjn->bhpn", w, dtx, Bb
+        )
+        return S1, y
+
+    state, ys = jax.lax.scan(body, state0.astype(jnp.float32), (xc, dtc, lac, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, NC * C, H, P)
+    return y[:, :S], state
+
+
+def mamba_mix(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, d)
+    conv_prev: jax.Array,  # (B, W-1, inner+2N)
+    state0: jax.Array,  # (B, H, P, N)
+):
+    """One Mamba2 mixer. Returns (out, conv_state, ssm_state)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    H, P, N = s.heads, s.head_dim, s.state_dim
+    z = jnp.einsum("bsd,di->bsi", x, use_weight(p["w_z"], None, "model"))
+    xs = jnp.einsum("bsd,di->bsi", x, use_weight(p["w_x"], None, "model"))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = causal_conv(conv_in, p["conv_w"], conv_prev)
+    inner = H * P
+    xs, Bm, Cm = (
+        conv_out[..., :inner],
+        conv_out[..., inner : inner + N],
+        conv_out[..., inner + N :],
+    )
+    # correct for any S including decode (S=1): window = last W-1 inputs seen
+    new_conv_prev = jnp.concatenate([conv_prev, conv_in], axis=1)[:, -(s.conv_dim - 1) :]
+
+    dt = jax.nn.softplus((dt_raw + p["dt_bias"]).astype(jnp.float32))  # (B,S,H)
+    loga = -jnp.exp(jnp.clip(p["A_log"].astype(jnp.float32), -8.0, 4.0)) * dt
+    xh = xs.reshape(B, S, H, P).astype(jnp.float32)
+    y, state1 = ssd_chunked(
+        xh, dt, loga, Bm.astype(jnp.float32), Cm.astype(jnp.float32), state0, s.chunk
+    )
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, inner)
+    # gated rmsnorm then out-projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-5)
+    y = (y * p["ln_y"].astype(jnp.float32)).astype(x.dtype)
+    y = shard_hint(y, ("pod", "data"), None, "model")
+    out = jnp.einsum("bsi,id->bsd", y, use_weight(p["w_out"], "model", None))
+    return out, new_conv_prev, state1
+
+
+def _mamba_layer(cfg, p, x, conv_prev, state0):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    out, conv_state, ssm_state = mamba_mix(cfg, p, h, conv_prev, state0)
+    return x + out, conv_state, ssm_state
+
+
+def _shared_attn_block(cfg, p, x, positions, *, kv_cache=None, pos=None):
+    """Full-seq (kv_cache=None) or decode-mode shared attention block."""
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    ap = AttnParams(wq=p["wq"], wk=p["wk"], wv=p["wv"], wo=p["wo"])
+    q, k, v = project_qkv(cfg, ap, h, positions)
+    if kv_cache is None:
+        o = chunked_attention(q, k, v, causal=True)
+        new_cache = (k, v)
+    else:
+        k_c, v_c = kv_cache
+        k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k, pos, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v, pos, axis=1)
+        o = decode_attention(q, k_c, v_c, pos + 1)
+        new_cache = (k_c, v_c)
+    x = x + jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1), p["wo"])
+    h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return x, new_cache
+
+
+def _zero_states(cfg: ModelConfig, B: int, dtype):
+    s = cfg.ssm
+    conv = jnp.zeros((B, s.conv_dim - 1, s.heads * s.head_dim + 2 * s.state_dim), dtype)
+    ssm = jnp.zeros((B, s.heads, s.head_dim, s.state_dim), jnp.float32)
+    return conv, ssm
+
+
+def _reshape_super(tree: Pytree, n_super: int, every: int) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda t: t[: n_super * every].reshape(n_super, every, *t.shape[1:]), tree
+    )
+
+
+def _tail(tree: Pytree, n_tail: int) -> Pytree:
+    return jax.tree_util.tree_map(lambda t: t[t.shape[0] - n_tail :], tree)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Pytree,
+    tokens: jax.Array,
+    frontend=None,
+    *,
+    remat: bool = True,
+    collect_kv: bool = False,
+    unembed_last_only: bool = False,
+):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard_hint(x, ("pod", "data"), None, None)
+    B, S, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    conv0, ssm0 = _zero_states(cfg, B, x.dtype)
+    n_super, every, n_tail = _split_counts(cfg)
+
+    def mamba_scan(x, blocks):
+        def body(x, p):
+            x, conv_st, ssm_st = _mamba_layer(cfg, p, x, conv0, ssm0)
+            ys = (conv_st, ssm_st) if collect_kv else ()
+            return x, ys
+
+        fn = jax.checkpoint(body) if remat else body
+        return jax.lax.scan(fn, x, blocks)
+
+    collected = []
+    if n_super:
+        super_blocks = _reshape_super(params["mamba"], n_super, every)
+
+        def super_body(x, p_super):
+            x, states = mamba_scan(x, p_super)
+            x, kv = _shared_attn_block(cfg, params["shared_attn"], x, positions)
+            return x, (states, kv if collect_kv else ())
+
+        fn = jax.checkpoint(super_body) if remat else super_body
+        x, (states, attn_kv) = jax.lax.scan(fn, x, super_blocks)
+        if collect_kv:
+            collected.append(jax.tree_util.tree_map(lambda t: t.reshape(-1, *t.shape[2:]), states))
+            collected_attn = attn_kv  # (n_super, B, S, KV, hd) x2
+    if n_tail:
+        x, states = mamba_scan(x, _tail(params["mamba"], n_tail))
+        if collect_kv:
+            collected.append(states)
+
+    if unembed_last_only:
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, use_weight(params["lm_head"], None, "model"))
+    logits = shard_hint(logits, ("pod", "data"), None, "model")
+    states = None
+    if collect_kv and collected:
+        states = jax.tree_util.tree_map(lambda *t: jnp.concatenate(t, 0), *collected) \
+            if len(collected) > 1 else collected[0]
+        if n_super:
+            states = (*states, *collected_attn)  # (conv, ssm, attn_k, attn_v)
+    return logits, jnp.float32(0.0), states
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    L = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    n_super, _, _ = _split_counts(cfg)
+    conv_ch = s.heads * s.head_dim + 2 * s.state_dim
+    specs = {
+        "conv": jax.ShapeDtypeStruct((L, batch, s.conv_dim - 1, conv_ch), dtype),
+        "ssm": jax.ShapeDtypeStruct((L, batch, s.heads, s.head_dim, s.state_dim), jnp.float32),
+        "length": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if n_super:
+        kv = (n_super, batch, max_len, cfg.n_kv_heads, hd)
+        specs["attn_k"] = jax.ShapeDtypeStruct(kv, dtype)
+        specs["attn_v"] = jax.ShapeDtypeStruct(kv, dtype)
+    return specs
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in cache_specs(cfg, batch, max_len, dtype).items()}
+
+
+def cache_pspec():
+    P = jax.sharding.PartitionSpec
+    return {
+        "conv": P(None, ("pod", "data"), None, None),
+        "ssm": P(None, ("pod", "data"), None, None, None),
+        "attn_k": P(None, ("pod", "data"), "model", None, None),
+        "attn_v": P(None, ("pod", "data"), "model", None, None),
+        "length": P(),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B,1,d)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    n_super, every, n_tail = _split_counts(cfg)
+
+    def mamba_body(x, xs):
+        p, conv_st, ssm_st = xs
+        h = rmsnorm(x, p["norm"], cfg.norm_eps)
+        out, conv1, ssm1 = mamba_mix(cfg, p, h, conv_st, ssm_st)
+        return x + out, (conv1, ssm1)
+
+    new_conv, new_ssm, new_k, new_v = [], [], None, None
+    if n_super:
+        mb = _reshape_super(params["mamba"], n_super, every)
+        conv_s = cache["conv"][: n_super * every].reshape(n_super, every, *cache["conv"].shape[1:])
+        ssm_s = cache["ssm"][: n_super * every].reshape(n_super, every, *cache["ssm"].shape[1:])
+
+        def super_body(x, xs):
+            p_super, conv_b, ssm_b, k_c, v_c = xs
+            x, states = jax.lax.scan(mamba_body, x, (p_super, conv_b, ssm_b))
+            x, (k1, v1) = _shared_attn_block(
+                cfg, params["shared_attn"], x, positions, kv_cache=(k_c, v_c), pos=pos
+            )
+            return x, (states[0], states[1], k1, v1)
+
+        x, (conv1, ssm1, new_k, new_v) = jax.lax.scan(
+            super_body, x, (mb, conv_s, ssm_s, cache["attn_k"], cache["attn_v"])
+        )
+        new_conv.append(conv1.reshape(-1, *conv1.shape[2:]))
+        new_ssm.append(ssm1.reshape(-1, *ssm1.shape[2:]))
+    if n_tail:
+        x, (conv1, ssm1) = jax.lax.scan(
+            mamba_body,
+            x,
+            (_tail(params["mamba"], n_tail), cache["conv"][cfg.n_layers - n_tail :],
+             cache["ssm"][cfg.n_layers - n_tail :]),
+        )
+        new_conv.append(conv1)
+        new_ssm.append(ssm1)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    new_cache = {
+        "conv": jnp.concatenate(new_conv, 0),
+        "ssm": jnp.concatenate(new_ssm, 0),
+        "length": pos + 1,
+    }
+    if n_super:
+        new_cache["attn_k"] = new_k
+        new_cache["attn_v"] = new_v
+    return logits, new_cache

@@ -1,0 +1,266 @@
+"""RWKV6 ("Finch") — attention-free linear recurrence with data-dependent
+decay. Family "ssm" (sub-quadratic: runs the long_500k cell).
+
+Chunked-parallel WKV (training/prefill): within a chunk of C tokens the
+recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state per head: K x V)
+    y_t = r_t . (S_{t-1} + (u o k_t) v_t^T)
+
+is evaluated with cumulative log-decay differences, which are <= 0 for all
+valid (i, j) pairs so the exp never overflows (the standard "decay cube" —
+exact, no clamping; memory O(C^2 K) per head, sharded over heads on the
+"model" axis). Across chunks the state is carried by a lax.scan. Decode is
+the O(1) recurrence.
+
+Numerics: the recurrence runs in fp32; projections in bf16.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Leaf, stacked
+from repro.models.layers import rmsnorm, shard_hint, use_weight
+
+Pytree = Any
+LORA = 64  # low-rank width of the data-dependent decay projection
+
+
+def schema(cfg: ModelConfig) -> Dict[str, Any]:
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    s = cfg.ssm
+    inner = s.heads * s.head_dim
+    F = cfg.d_ff
+    return {
+        "embed": Leaf((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": Leaf((d,), (None,), init="ones"),
+        "lm_head": Leaf((d, V), ("embed", "vocab"), scale=0.02),
+        "blocks": {
+            "attn_norm": stacked(L, (d,), (None,), init="ones"),
+            # token-shift lerp coefficients for (r, k, v, g, w)
+            "mu": stacked(L, (5, d), (None, None), init="zeros"),
+            "w_r": stacked(L, (d, inner), ("embed", "inner")),
+            "w_k": stacked(L, (d, inner), ("embed", "inner")),
+            "w_v": stacked(L, (d, inner), ("embed", "inner")),
+            "w_g": stacked(L, (d, inner), ("embed", "inner")),
+            "w_o": stacked(L, (inner, d), ("inner", "embed")),
+            # data-dependent decay: w_t = exp(-exp(w0 + tanh(x W_a) W_b))
+            "w0": stacked(L, (inner,), (None,), init="zeros"),
+            "w_lora_a": stacked(L, (d, LORA), ("embed", None)),
+            "w_lora_b": stacked(L, (LORA, inner), (None, "inner"), scale=0.01),
+            # per-head bonus for the current token (tiny -> replicated; the
+            # head count (40) does not divide the model axis)
+            "u": stacked(L, (s.heads, s.head_dim), (None, None), init="zeros"),
+            "ln_x": stacked(L, (inner,), (None,), init="ones"),
+            # channel mix
+            "mlp_norm": stacked(L, (d,), (None,), init="ones"),
+            "mu_c": stacked(L, (2, d), (None, None), init="zeros"),
+            "w_ck": stacked(L, (d, F), ("embed", "ffn")),
+            "w_cv": stacked(L, (F, d), ("ffn", "embed")),
+            "w_cr": stacked(L, (d, d), ("embed", None)),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B, S, d); prev: (B, 1, d) last token of the previous segment."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu  # mu=0 -> x (identity), mu=1 -> shifted
+
+
+def wkv_chunked(
+    r: jax.Array,  # (B, S, H, K) fp32
+    k: jax.Array,  # (B, S, H, K)
+    v: jax.Array,  # (B, S, H, V)
+    logw: jax.Array,  # (B, S, H, K) <= 0
+    u: jax.Array,  # (H, K)
+    state0: jax.Array,  # (B, H, K, V)
+    chunk: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact chunked WKV. Returns (y (B,S,H,V), state (B,H,K,V))."""
+    B, S, H, K = r.shape
+    Vd = v.shape[-1]
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))  # pad logw=0 (w=1)
+    N = r.shape[1] // C
+
+    def to_chunks(t):
+        return t.reshape(B, N, C, H, -1).transpose(1, 0, 3, 2, 4)  # (N,B,H,C,·)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))
+
+    idx = jnp.arange(C)
+    strict = idx[:, None] > idx[None, :]  # j < i
+
+    def body(S0, xs):
+        rb, kb, vb, wb = xs  # (B,H,C,K/V)
+        cum = jnp.cumsum(wb, axis=2)  # (B,H,C,K) logW_i (inclusive)
+        cum_prev = cum - wb  # logW_{i-1} (exclusive)
+        # intra-chunk scores_{ij} = sum_k r_i k_j exp(cum_prev_i - cum_j), j<i
+        diff = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,C,C,K)
+        diff = jnp.where(strict[None, None, :, :, None], diff, -jnp.inf)
+        scores = jnp.einsum("bhik,bhijk,bhjk->bhij", rb, jnp.exp(diff), kb)
+        # current-token bonus: r_i . (u o k_i) v_i
+        bonus = jnp.einsum("bhik,hk,bhik->bhi", rb, u, kb)
+        y = jnp.einsum("bhij,bhjv->bhiv", scores, vb) + bonus[..., None] * vb
+        # initial-state contribution: r_i diag(exp(cum_prev_i)) S0
+        a = rb * jnp.exp(cum_prev)
+        y = y + jnp.einsum("bhik,bhkv->bhiv", a, S0)
+        # state update: S' = diag(exp(cum_C)) S0 + sum_j exp(cum_C - cum_j) k_j v_j
+        total = cum[:, :, -1:, :]  # (B,H,1,K)
+        kd = kb * jnp.exp(total - cum)
+        S1 = jnp.exp(total[:, :, 0, :, None]) * S0 + jnp.einsum("bhjk,bhjv->bhkv", kd, vb)
+        return S1, y
+
+    state, ys = jax.lax.scan(body, state0.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, N * C, H, Vd)
+    return y[:, :S], state
+
+
+def time_mix(
+    cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array, prev: jax.Array,
+    state0: jax.Array, chunk: int = 64,
+):
+    """RWKV6 time-mix over a segment. Returns (out, last_x, state)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    xs = _token_shift(x, prev)
+    xr, xk, xv, xg, xw = (_lerp(x, xs, p["mu"][i]) for i in range(5))
+    r = jnp.einsum("bsd,di->bsi", xr, use_weight(p["w_r"], None, "model"))
+    k = jnp.einsum("bsd,di->bsi", xk, use_weight(p["w_k"], None, "model"))
+    v = jnp.einsum("bsd,di->bsi", xv, use_weight(p["w_v"], None, "model"))
+    g = jax.nn.silu(jnp.einsum("bsd,di->bsi", xg, use_weight(p["w_g"], None, "model")).astype(jnp.float32))
+    dlr = jnp.einsum(
+        "bsl,li->bsi", jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_lora_a"])), p["w_lora_b"]
+    )
+    logw = -jnp.exp(jnp.clip((p["w0"] + dlr).astype(jnp.float32), -10.0, 5.0))
+
+    def heads(t):
+        return t.reshape(B, S, s.heads, s.head_dim).astype(jnp.float32)
+
+    y, state = wkv_chunked(heads(r), heads(k), heads(v), heads(logw), p["u"].astype(jnp.float32), state0, chunk)
+    y = y.reshape(B, S, -1)
+    # per-head group norm (gain only), then output gate
+    yh = y.reshape(B, S, s.heads, s.head_dim)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(B, S, -1) * p["ln_x"].astype(jnp.float32)) * g
+    y = shard_hint(y.astype(x.dtype), ("pod", "data"), None, "model")
+    out = jnp.einsum("bsi,id->bsd", y, use_weight(p["w_o"], "model", None))
+    return out, x[:, -1:], state
+
+
+def channel_mix(cfg, p, x, prev):
+    xs = _token_shift(x, prev)
+    xk = _lerp(x, xs, p["mu_c"][0])
+    xr = _lerp(x, xs, p["mu_c"][1])
+    k = jnp.einsum("bsd,df->bsf", xk, use_weight(p["w_ck"], None, "model"))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    k = shard_hint(k, ("pod", "data"), None, "model")
+    kv = jnp.einsum("bsf,fd->bsd", k, use_weight(p["w_cv"], "model", None))
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_cr"]).astype(jnp.float32))
+    return (rgate * kv.astype(jnp.float32)).astype(x.dtype), x[:, -1:]
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Pytree,
+    tokens: jax.Array,
+    frontend=None,
+    *,
+    remat: bool = True,
+    collect_kv: bool = False,
+    unembed_last_only: bool = False,
+):
+    """Full-sequence forward (zero initial state). Returns (logits, aux, state)."""
+    s = cfg.ssm
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard_hint(x, ("pod", "data"), None, None)
+    B, S, d = x.shape
+    zero_prev = jnp.zeros((B, 1, d), x.dtype)
+    zero_state = jnp.zeros((B, s.heads, s.head_dim, s.head_dim), jnp.float32)
+
+    def body(x, p):
+        h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        out, last_tm, st = time_mix(cfg, p, h, zero_prev, zero_state, s.chunk)
+        x = x + out
+        h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+        out, last_cm = channel_mix(cfg, p, h, zero_prev)
+        x = x + out
+        ys = (last_tm, last_cm, st) if collect_kv else ()
+        return shard_hint(x, ("pod", "data"), None, None), ys
+
+    fn = jax.checkpoint(body) if remat else body
+    x, ys = jax.lax.scan(fn, x, params["blocks"])
+    if unembed_last_only:
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, use_weight(params["lm_head"], None, "model"))
+    logits = shard_hint(logits, ("pod", "data"), None, "model")
+    return logits, jnp.float32(0.0), ys if collect_kv else None
+
+
+# ---------------------------------------------------------------------------
+# decode — O(1) state recurrence
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    L, d = cfg.n_layers, cfg.d_model
+    return {
+        "wkv": jax.ShapeDtypeStruct((L, batch, s.heads, s.head_dim, s.head_dim), jnp.float32),
+        "tm_prev": jax.ShapeDtypeStruct((L, batch, 1, d), dtype),
+        "cm_prev": jax.ShapeDtypeStruct((L, batch, 1, d), dtype),
+        "length": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in cache_specs(cfg, batch, max_len, dtype).items()}
+
+
+def cache_pspec():
+    P = jax.sharding.PartitionSpec
+    return {
+        "wkv": P(None, ("pod", "data"), "model", None, None),
+        "tm_prev": P(None, ("pod", "data"), None, None),
+        "cm_prev": P(None, ("pod", "data"), None, None),
+        "length": P(),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    s = cfg.ssm
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, 1, d)
+
+    def body(x, xs):
+        p, S0, tm_prev, cm_prev = xs
+        h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        out, last, S1 = time_mix(cfg, p, h, tm_prev, S0, chunk=1)
+        x = x + out
+        h2 = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+        out, last_c = channel_mix(cfg, p, h2, cm_prev)
+        x = x + out
+        return x, (S1, last, last_c)
+
+    x, (wkv, tm_prev, cm_prev) = jax.lax.scan(
+        body, x, (params["blocks"], cache["wkv"], cache["tm_prev"], cache["cm_prev"])
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, {
+        "wkv": wkv,
+        "tm_prev": tm_prev,
+        "cm_prev": cm_prev,
+        "length": pos + 1,
+    }

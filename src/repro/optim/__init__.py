@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm  # noqa: F401
+from repro.optim.grad_compress import compress_decompress, error_feedback_update  # noqa: F401
+from repro.optim.schedules import cosine_schedule  # noqa: F401

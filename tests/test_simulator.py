@@ -1,0 +1,104 @@
+"""Simulator behaviour + property-based invariants (hypothesis)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SimConfig
+from repro.core.simulator import simulate
+from repro.core.traces import WORKLOADS, gen_thread_trace
+
+N = 40_000  # small but past warm-up
+
+
+def test_deterministic():
+    a = simulate("bc", "skybyte-full", total_req=N, seed=3)
+    b = simulate("bc", "skybyte-full", total_req=N, seed=3)
+    assert a["exec_ns"] == b["exec_ns"]
+    assert a["flash_write_pages"] == b["flash_write_pages"]
+
+
+def test_variant_ordering():
+    """DRAM-only is fastest; SkyByte-Full beats Base-CSSD; AMAT improves."""
+    base = simulate("srad", "base-cssd", total_req=N)
+    full = simulate("srad", "skybyte-full", total_req=N)
+    dram = simulate("srad", "dram-only", total_req=N)
+    assert dram["exec_ns"] < full["exec_ns"] < base["exec_ns"]
+    assert full["amat_ns"] < base["amat_ns"]
+
+
+def test_request_conservation():
+    """Every generated request is retired exactly once."""
+    r = simulate("tpcc", "skybyte-full", total_req=N)
+    assert r["n"] == r["n_req_per_thread"] * r["n_threads"]
+    classes = (r["host_r"] + r["host_w"] + r["hit_log"] + r["hit_cache"]
+               + r["miss_flash"] + r["ssd_w"])
+    assert classes == r["n"]
+
+
+def test_ctx_switch_only_with_flag():
+    r = simulate("bc", "skybyte-wp", total_req=N)
+    assert r["ctx_switches"] == 0
+    r = simulate("bc", "skybyte-c", total_req=N)
+    assert r["ctx_switches"] > 0
+
+
+def test_dram_only_flat_latency():
+    r = simulate("ycsb", "dram-only", total_req=N)
+    assert r["miss_flash"] == 0 and r["flash_write_pages"] == 0
+    assert abs(r["amat_ns"] - 70.0) < 1.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    wl=st.sampled_from(sorted(WORKLOADS)),
+    seed=st.integers(0, 5),
+)
+def test_trace_statistics(wl, seed):
+    """Generated traces respect Table I parameters."""
+    spec = WORKLOADS[wl]
+    tr = gen_thread_trace(spec, 20_000, seed, scale=128)
+    wr = float(np.mean(tr["write"]))
+    assert abs(wr - spec.write_ratio) < 0.08, (wl, wr, spec.write_ratio)
+    assert tr["page"].min() >= 0
+    assert tr["page"].max() < tr["n_pages"]
+    assert (tr["line"] >= 0).all() and (tr["line"] < 64).all()
+    # Fig 6 shape: dirty lines per page are few
+    import collections
+
+    per_page = collections.defaultdict(set)
+    for p, l, w in zip(tr["page"][:5000], tr["line"][:5000], tr["write"][:5000]):
+        if w:
+            per_page[int(p)].add(int(l))
+    if per_page:
+        mean_dirty = np.mean([len(v) for v in per_page.values()])
+        assert mean_dirty <= 8.0
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    threshold=st.sampled_from([500.0, 2000.0, 8000.0]),
+    policy=st.sampled_from(["RR", "RANDOM", "CFS"]),
+)
+def test_policies_and_thresholds_complete(threshold, policy):
+    """Any trigger threshold / scheduling policy still retires all work
+    (no lost wakeups, no deadlock) and keeps latency accounting sane."""
+    cfg = dataclasses.replace(
+        SimConfig(), ctx_threshold_ns=threshold, sched_policy=policy
+    )
+    r = simulate("dlrm", "skybyte-full", cfg=cfg, total_req=20_000)
+    assert r["n"] == r["n_req_per_thread"] * r["n_threads"]
+    assert r["exec_ns"] > 0
+    assert r["amat_ns"] >= 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(log_mb=st.sampled_from([16, 64, 256]))
+def test_write_log_capacity_monotonic(log_mb):
+    """A larger write log never increases compaction count."""
+    cfg_small = dataclasses.replace(SimConfig(), write_log_bytes=16 << 20)
+    cfg_big = dataclasses.replace(SimConfig(), write_log_bytes=log_mb << 20)
+    small = simulate("srad", "skybyte-w", cfg=cfg_small, total_req=N)
+    big = simulate("srad", "skybyte-w", cfg=cfg_big, total_req=N)
+    assert big["compactions"] <= small["compactions"]

@@ -1,0 +1,150 @@
+"""Optimizer, gradient compression, data pipeline, checkpointing, sharding
+rules, HLO analyzer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import OptimConfig, get_reduced
+from repro.checkpoint import Checkpointer
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.sharding import DEFAULT_RULES, param_specs, spec_for_leaf
+from repro.launch import hlo_analysis
+from repro.models.api import ModelSpec
+from repro.models.common import Leaf
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.grad_compress import compress_decompress, error_feedback_update
+
+
+def test_adamw_converges_quadratic():
+    cfg = OptimConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params)
+    lr = jnp.float32(0.1)
+    for _ in range(200):
+        grads = {"w": 2 * state.master["w"]}  # d/dw ||w||^2
+        params, state, _ = adamw_update(cfg, state, grads, lr)
+    assert float(jnp.sum(jnp.abs(state.master["w"]))) < 1e-2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4, max_size=64))
+def test_compress_error_bounded(vals):
+    g = jnp.asarray(vals, jnp.float32)
+    g_hat, err = compress_decompress(g)
+    scale = max(float(jnp.max(jnp.abs(g))), 1e-12) / 127.0
+    assert float(jnp.max(jnp.abs(err))) <= scale * 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(g_hat + err), np.asarray(g), atol=1e-5)
+
+
+def test_error_feedback_accumulates():
+    """Residual carries quantization error to the next step (no loss)."""
+    g = {"w": jnp.full((8,), 0.001, jnp.float32)}
+    res = {"w": jnp.zeros((8,), jnp.float32)}
+    total = jnp.zeros((8,), jnp.float32)
+    for _ in range(50):
+        g_hat, res = error_feedback_update(g, res)
+        total = total + g_hat["w"]
+    # sum of compressed grads ~ sum of true grads (error feedback property)
+    np.testing.assert_allclose(np.asarray(total), 0.001 * 50, rtol=0.1)
+
+
+def test_data_pipeline_restart_safe():
+    a = SyntheticLM(1000, 64, 4, seed=7)
+    b = SyntheticLM(1000, 64, 4, seed=7)
+    for step in (0, 3, 11):
+        np.testing.assert_array_equal(a.batch_at(step)["tokens"],
+                                      b.batch_at(step)["tokens"])
+    assert not np.array_equal(a.batch_at(0)["tokens"], a.batch_at(1)["tokens"])
+
+
+def test_checkpoint_roundtrip_and_elastic(tmp_path):
+    spec = ModelSpec(get_reduced("smollm-135m"))
+    params = spec.init(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(5, params, extra={"data_step": 6})
+    target = spec.init(jax.random.PRNGKey(1))  # different values
+    restored, extra, step = ck.restore(target)
+    assert step == 5 and extra["data_step"] == 6
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # elastic: restore with explicit (single-device) shardings
+    dev = jax.devices()[0]
+    sharding = jax.sharding.SingleDeviceSharding(dev)
+    restored2, _, _ = ck.restore(target, shardings=sharding)
+    assert all(
+        x.sharding == sharding for x in jax.tree_util.tree_leaves(restored2)
+    )
+
+
+def test_checkpoint_keep_and_atomic(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"x": jnp.ones((3,)) * s})
+    assert sorted(ck.all_steps()) == [3, 4]
+    restored, _, step = ck.restore({"x": jnp.zeros((3,))})
+    assert step == 4 and float(restored["x"][0]) == 4.0
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_sharding_divisibility_fallback():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # divisible: sharded
+    leaf = Leaf((256, 1024), ("embed", "ffn"))
+    spec = spec_for_leaf(leaf, mesh)
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    # 40 heads do not divide 16 -> replicated on that dim
+    leaf = Leaf((40, 64), ("heads", None))
+    spec = spec_for_leaf(leaf, mesh)
+    assert spec == jax.sharding.PartitionSpec(None, None)
+
+
+HLO_SAMPLE = """
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %iter = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %dot.1 = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%dot.1), replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %next = s32[] add(%iter, %one)
+  ROOT %t = (s32[], f32[8,128]) tuple(%next, %ar)
+}
+
+%cond (p.1: (s32[], f32[8,128])) -> pred[] {
+  %p.1 = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p.1), index=0
+  %k = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+ENTRY %main.1 (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%zero, %a)
+  %wh = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_hlo_analysis_loop_multiplication():
+    r = hlo_analysis.analyze(HLO_SAMPLE)
+    assert r["entry"] == "main.1"
+    # dot flops = 2*8*128*128 per iteration, 7 iterations
+    assert r["flops"] == 7 * 2 * 8 * 128 * 128
+    ar = r["collectives"]["all-reduce"]
+    assert ar["count"] == 7
+    # ring all-reduce traffic: 2 * bytes * (n-1)/n, n=4, bytes=8*128*4
+    expected = 7 * 2.0 * (8 * 128 * 4) * (3 / 4)
+    assert abs(ar["traffic"] - expected) < 1e-6
