@@ -1,17 +1,35 @@
-"""Shared benchmark harness: cached simulator runs + CSV emission.
+"""Shared benchmark harness: cached simulator runs + CSV emission + the
+process-parallel grid orchestrator.
 
-Every figure module exposes ``run(total_req, force) -> list[dict]`` and a
-``main()``. Results are cached under artifacts/sim/ keyed by all run
-parameters, so re-running the suite is incremental.
+Every figure module exposes:
+  run(total_req, force) -> list[dict]   — compute the figure's rows
+  cells(total_req)      -> list[dict]   — the (workload, variant, cfg) grid
+                                          it will ask cached_sim for
+  main(total_req, force)                — run + print CSV
+
+``cells`` is derived mechanically from ``run`` via collect mode: cached_sim
+records every requested cell and returns a neutral stub, so the grid can be
+enumerated without simulating. run.py gathers all cells of the selected
+sections, dedupes them by cache key (fig14/17/18/tab3 share one grid), and
+fans the misses across worker processes (warm_cache); the figures then run
+serially against a fully warm cache.
+
+Results are cached under artifacts/sim/, keyed by all run parameters PLUS a
+fingerprint of the simulator sources (repro/core/*.py + configs/base.py) —
+editing the simulator invalidates stale artifacts automatically. The engine
+choice is deliberately NOT part of the key: both engines are statistically
+bit-compatible (tests/test_engine.py), so their artifacts are interchangeable.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import json
+import os
 import time
+from concurrent.futures import ProcessPoolExecutor, as_completed
 from pathlib import Path
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.configs.base import SimConfig
 from repro.core.simulator import simulate
@@ -24,25 +42,166 @@ VARIANTS = ("base-cssd", "skybyte-c", "skybyte-p", "skybyte-w",
 # through multiple compaction cycles (steady state)
 TOTAL_REQ = 1_500_000
 
+# perf accounting for --profile / BENCH_sim.json (per-process)
+PERF = {"fresh_req": 0, "fresh_wall": 0.0, "cached_hits": 0}
+
+
+def _code_fingerprint() -> str:
+    """Hash of the simulator implementation: cached artifacts must not
+    survive changes to the model code they were produced by."""
+    import repro.configs.base as base_mod
+    import repro.core as core_pkg
+
+    h = hashlib.sha1()
+    files = sorted(Path(core_pkg.__file__).parent.glob("*.py"))
+    files.append(Path(base_mod.__file__))
+    for f in files:
+        h.update(f.name.encode())
+        h.update(f.read_bytes())
+    return h.hexdigest()[:12]
+
+
+_FINGERPRINT: Optional[str] = None
+
+
+def code_fingerprint() -> str:
+    global _FINGERPRINT
+    if _FINGERPRINT is None:
+        _FINGERPRINT = _code_fingerprint()
+    return _FINGERPRINT
+
+
+def sim_key(workload: str, variant: str, cfg: SimConfig, total_req: int,
+            seed: int, n_threads: int) -> Tuple[str, Path]:
+    """Cache key + artifact path for one simulation cell."""
+    d = dataclasses.asdict(cfg)
+    d.pop("engine", None)  # engines are bit-compatible; share artifacts
+    key = json.dumps(
+        [workload, variant, d, total_req, seed, n_threads, code_fingerprint()],
+        sort_keys=True, default=str,
+    )
+    h = hashlib.sha1(key.encode()).hexdigest()[:16]
+    return key, ART / f"{workload}_{variant}_{h}.json"
+
+
+class _CollectStub(dict):
+    """Stands in for a result dict during cell collection: any missing key
+    reads as 1 so ratio/geomean arithmetic in run() stays well-defined."""
+
+    def __missing__(self, key):
+        return 1
+
+    def get(self, key, default=None):  # keep .get() consistent with []
+        return 1
+
+
+_COLLECTOR: Optional[List[Dict[str, Any]]] = None
+
+
+def collect_cells(run_fn, total_req: int) -> List[Dict[str, Any]]:
+    """Execute a figure's run() in collect mode: cached_sim records every
+    requested cell instead of simulating. Returns the cell specs."""
+    global _COLLECTOR
+    _COLLECTOR = []
+    try:
+        run_fn(total_req=total_req, force=False)
+    finally:
+        cells, _COLLECTOR = _COLLECTOR, None
+    return cells
+
 
 def cached_sim(workload: str, variant: str, cfg: SimConfig = SimConfig(),
                total_req: int = TOTAL_REQ, seed: int = 0, n_threads: int = 0,
                force: bool = False) -> Dict[str, Any]:
+    if _COLLECTOR is not None:
+        _COLLECTOR.append(dict(workload=workload, variant=variant, cfg=cfg,
+                               total_req=total_req, seed=seed,
+                               n_threads=n_threads))
+        return _CollectStub()
     ART.mkdir(parents=True, exist_ok=True)
-    key = json.dumps(
-        [workload, variant, dataclasses.asdict(cfg), total_req, seed, n_threads],
-        sort_keys=True, default=str,
-    )
-    h = hashlib.sha1(key.encode()).hexdigest()[:16]
-    path = ART / f"{workload}_{variant}_{h}.json"
+    _, path = sim_key(workload, variant, cfg, total_req, seed, n_threads)
     if path.exists() and not force:
+        PERF["cached_hits"] += 1
         return json.loads(path.read_text())
     t0 = time.time()
     out = simulate(workload, variant, cfg, total_req=total_req, seed=seed,
                    n_threads=n_threads)
-    out["wall_s"] = round(time.time() - t0, 1)
+    wall = time.time() - t0
+    PERF["fresh_req"] += out["n"]
+    PERF["fresh_wall"] += wall
+    out["wall_s"] = round(wall, 1)
     path.write_text(json.dumps(out, indent=1, default=float))
     return json.loads(path.read_text())
+
+
+def _warm_one(spec: Dict[str, Any]) -> Tuple[str, int, float, str]:
+    """Worker: compute one cell into the artifact cache. Returns
+    (cell name, requests simulated, wall seconds, error or ""). A failing
+    cell must not kill the suite — it costs only its own figures."""
+    name = f"{spec['workload']}/{spec['variant']}"
+    try:
+        r = cached_sim(**spec)
+    except Exception as e:  # noqa: BLE001 - containment boundary
+        return name, 0, 0.0, f"{type(e).__name__}: {e}"
+    return name, r.get("n", 0), r.get("wall_s", 0.0), ""
+
+
+def dedupe_cells(cells: List[Dict[str, Any]],
+                 force: bool = False) -> List[Dict[str, Any]]:
+    """Drop duplicate cells (same cache key) and, unless force, cells whose
+    artifact already exists."""
+    seen = set()
+    todo = []
+    for spec in cells:
+        key, path = sim_key(spec["workload"], spec["variant"], spec["cfg"],
+                            spec["total_req"], spec["seed"], spec["n_threads"])
+        if key in seen:
+            continue
+        seen.add(key)
+        if path.exists() and not force:
+            continue
+        todo.append(spec)
+    return todo
+
+
+def warm_cache(cells: List[Dict[str, Any]], jobs: int = 1,
+               force: bool = False, verbose: bool = True) -> Dict[str, Any]:
+    """Fan the missing cells of the (workload, variant, figure) grid across
+    worker processes. Returns aggregate perf numbers."""
+    todo = dedupe_cells(cells, force=force)
+    stats = {"cells_total": len(cells), "cells_run": len(todo),
+             "req": 0, "cpu_s": 0.0, "wall_s": 0.0}
+    if not todo:
+        return stats
+    ART.mkdir(parents=True, exist_ok=True)
+    if force:  # workers skip existing artifacts; drop them up front instead
+        for spec in todo:
+            _, path = sim_key(spec["workload"], spec["variant"], spec["cfg"],
+                              spec["total_req"], spec["seed"], spec["n_threads"])
+            path.unlink(missing_ok=True)
+    t0 = time.time()
+    jobs = max(1, min(jobs, len(todo)))
+
+    def drain(results) -> None:
+        for k, (name, req, wall, err) in enumerate(results):
+            stats["req"] += req
+            stats["cpu_s"] += wall
+            if err:
+                stats["failed"] = stats.get("failed", 0) + 1
+                print(f"# warm [{k + 1}/{len(todo)}] {name} FAILED: {err}",
+                      flush=True)
+            elif verbose:
+                print(f"# warm [{k + 1}/{len(todo)}] {name} ({wall:.0f}s)",
+                      flush=True)
+
+    if jobs == 1:
+        drain(map(_warm_one, todo))
+    else:
+        with ProcessPoolExecutor(max_workers=jobs) as ex:
+            futs = [ex.submit(_warm_one, spec) for spec in todo]
+            drain(f.result() for f in as_completed(futs))
+    stats["wall_s"] = time.time() - t0
+    return stats
 
 
 def print_csv(name: str, rows: List[Dict[str, Any]], cols: List[str]) -> None:

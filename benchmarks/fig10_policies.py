@@ -6,7 +6,7 @@ import dataclasses
 
 from repro.configs.base import SimConfig
 
-from benchmarks.common import TOTAL_REQ, WORKLOADS, cached_sim, print_csv
+from benchmarks.common import TOTAL_REQ, collect_cells, WORKLOADS, cached_sim, print_csv
 
 
 def run(total_req: int = TOTAL_REQ, force: bool = False):
@@ -26,6 +26,11 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                 "ctx_switches": r["ctx_switches"],
             })
     return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
 
 
 def main(total_req: int = TOTAL_REQ, force: bool = False):

@@ -3,7 +3,7 @@ count (8 cores). Paper: throughput scales with threads while flash reads
 dominate; flattens when context-switch overhead ~ flash latency."""
 from __future__ import annotations
 
-from benchmarks.common import TOTAL_REQ, WORKLOADS, cached_sim, print_csv
+from benchmarks.common import TOTAL_REQ, collect_cells, WORKLOADS, cached_sim, print_csv
 
 THREADS = (8, 16, 24, 32, 48)
 
@@ -26,6 +26,11 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                 "ctx_switches": r["ctx_switches"],
             })
     return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
 
 
 def main(total_req: int = TOTAL_REQ, force: bool = False):

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import TOTAL_REQ, VARIANTS, WORKLOADS, cached_sim, print_csv
+from benchmarks.common import TOTAL_REQ, collect_cells, VARIANTS, WORKLOADS, cached_sim, print_csv
 
 
 def run(total_req: int = TOTAL_REQ, force: bool = False):
@@ -29,6 +29,11 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
     rows.append({"workload": "GEOMEAN(W/WP/Full)", "variant": "-",
                  "reduction_vs_base": round(float(np.exp(np.mean(np.log(red)))), 2)})
     return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
 
 
 def main(total_req: int = TOTAL_REQ, force: bool = False):

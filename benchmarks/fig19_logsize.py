@@ -7,7 +7,7 @@ import dataclasses
 
 from repro.configs.base import SimConfig
 
-from benchmarks.common import TOTAL_REQ, cached_sim, print_csv
+from benchmarks.common import TOTAL_REQ, collect_cells, cached_sim, print_csv
 
 LOG_MB = (16, 32, 64, 128, 256)  # at scale=1; scaled down by cfg.scale
 WLS = ("bc", "srad", "tpcc", "dlrm")
@@ -31,6 +31,11 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                 "compactions": r.get("compactions", 0),
             })
     return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
 
 
 def main(total_req: int = TOTAL_REQ, force: bool = False):

@@ -7,7 +7,7 @@ import dataclasses
 
 from repro.configs.base import FLASH_CLASSES, SimConfig
 
-from benchmarks.common import TOTAL_REQ, cached_sim, print_csv
+from benchmarks.common import TOTAL_REQ, collect_cells, cached_sim, print_csv
 
 WLS = ("bfs-dense", "srad", "tpcc", "dlrm")
 
@@ -30,6 +30,11 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                     "speedup_vs_P": round(base["exec_ns"] / r["exec_ns"], 3),
                 })
     return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
 
 
 def main(total_req: int = TOTAL_REQ, force: bool = False):

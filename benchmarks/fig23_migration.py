@@ -7,7 +7,7 @@ import dataclasses
 
 from repro.configs.base import SimConfig
 
-from benchmarks.common import TOTAL_REQ, WORKLOADS, cached_sim, print_csv
+from benchmarks.common import TOTAL_REQ, collect_cells, WORKLOADS, cached_sim, print_csv
 
 DESIGNS = (
     ("skybyte-c", "skybyte", "SkyByte-C"),
@@ -35,6 +35,11 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                 "promotions": r["promotions"], "demotions": r["demotions"],
             })
     return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
 
 
 def main(total_req: int = TOTAL_REQ, force: bool = False):

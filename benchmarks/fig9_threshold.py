@@ -7,7 +7,7 @@ import dataclasses
 
 from repro.configs.base import SimConfig
 
-from benchmarks.common import TOTAL_REQ, cached_sim, print_csv
+from benchmarks.common import TOTAL_REQ, collect_cells, cached_sim, print_csv
 
 THRESHOLDS_NS = (500.0, 1_000.0, 2_000.0, 4_000.0, 8_000.0, 16_000.0)
 WLS = ("bfs-dense", "srad", "tpcc", "dlrm")
@@ -30,6 +30,11 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                 "ctx_switches": r["ctx_switches"],
             })
     return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
 
 
 def main(total_req: int = TOTAL_REQ, force: bool = False):

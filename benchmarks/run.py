@@ -1,19 +1,40 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run            # full suite
-  PYTHONPATH=src python -m benchmarks.run --quick    # reduced request counts
+  PYTHONPATH=src python -m benchmarks.run                 # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick         # reduced req counts
+  PYTHONPATH=src python -m benchmarks.run --jobs $(nproc) # parallel grid
   PYTHONPATH=src python -m benchmarks.run --only fig14,fig18
+  PYTHONPATH=src python -m benchmarks.run --profile       # per-section req/s
 
-Simulator results are cached in artifacts/sim/ (delete to re-run).
-The roofline section reads the dry-run artifacts (artifacts/dryrun/).
+The orchestrator first enumerates every (workload, variant, cfg) cell the
+selected sections will request (via each module's cells()), dedupes them by
+cache key — fig14/17/18/tab3 share one 7x8 grid — and fans the misses
+across --jobs worker processes. The figure modules then render serially
+from the warm cache in seconds.
+
+Simulator results are cached in artifacts/sim/, keyed by run parameters
+plus a fingerprint of the simulator sources (stale artifacts never survive
+code changes; delete the directory to force a full re-run).
+
+A machine-readable perf report is written to BENCH_sim.json: req/s of both
+replay engines on a calibration cell, per-section wall clock, and suite
+totals. The roofline section reads the dry-run artifacts (artifacts/dryrun/).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
 import sys
 import time
+from pathlib import Path
+
+from repro.configs.base import SimConfig
+from repro.core.simulator import simulate
 
 from benchmarks import (
+    common,
     fig9_threshold,
     fig10_policies,
     fig14_exec_time,
@@ -42,27 +63,100 @@ SECTIONS = [
     ("fig23", fig23_migration, 600_000, 200_000),
 ]
 
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
 
-def main() -> None:
+
+def calibrate_engines(total_req: int = 200_000) -> dict:
+    """Measure replay throughput of both engines on one calibration cell
+    (skybyte-full / bfs-dense — the paper's headline configuration)."""
+    # suspend any --engine override: the whole point is comparing both
+    forced = os.environ.pop("REPRO_SIM_ENGINE", None)
+    out = {}
+    try:
+        for engine in ("reference", "batched"):
+            cfg = dataclasses.replace(SimConfig(), engine=engine)
+            t0 = time.time()
+            r = simulate("bfs-dense", "skybyte-full", cfg, total_req=total_req,
+                         seed=0)
+            out[engine] = round(r["n"] / (time.time() - t0), 1)
+    finally:
+        if forced is not None:
+            os.environ["REPRO_SIM_ENGINE"] = forced
+    out["speedup"] = round(out["batched"] / max(out["reference"], 1e-9), 2)
+    return out
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
-    args = ap.parse_args()
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for the simulation grid "
+                         "(default 1; try $(nproc))")
+    ap.add_argument("--engine", default="",
+                    choices=["", "reference", "batched"],
+                    help="force a replay engine (default: SimConfig default)")
+    ap.add_argument("--profile", action="store_true",
+                    help="print per-section req/s and cache hit counts")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the engine-throughput calibration runs")
+    args = ap.parse_args(argv)
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
+    if args.engine:
+        os.environ["REPRO_SIM_ENGINE"] = args.engine
+
+    report = {
+        "jobs": args.jobs,
+        "quick": bool(args.quick),
+        "code_fingerprint": common.code_fingerprint(),
+        "sections": {},
+    }
     t0 = time.time()
-    for name, mod, full_n, quick_n in SECTIONS:
-        if only and name not in only:
-            continue
-        n = quick_n if args.quick else full_n
-        t1 = time.time()
+
+    selected = [(name, mod, quick_n if args.quick else full_n)
+                for name, mod, full_n, quick_n in SECTIONS
+                if not only or name in only]
+
+    # 1) enumerate + dedupe the full grid, 2) warm it in parallel
+    cells = []
+    enumerated = set()
+    for name, mod, n in selected:
         try:
-            mod.main(total_req=n, force=args.force)
+            cells.extend(mod.cells(total_req=n))
+            enumerated.add(name)
+        except Exception as e:
+            print(f"# {name} cell enumeration FAILED: "
+                  f"{type(e).__name__}: {e}", file=sys.stderr)
+    warm = common.warm_cache(cells, jobs=args.jobs, force=args.force)
+    report["grid"] = warm
+    print(f"# grid: {warm['cells_total']} cells requested, "
+          f"{warm['cells_run']} simulated fresh "
+          f"({warm['req'] / 1e6:.1f}M req, {warm['cpu_s']:.0f}s cpu, "
+          f"{warm['wall_s']:.0f}s wall at --jobs {args.jobs})", flush=True)
+
+    # 3) render every section from the warm cache. The warm phase already
+    # force-recomputed every enumerated cell; only a section whose grid
+    # could not be enumerated must carry --force itself (serial but correct).
+    for name, mod, n in selected:
+        t1 = time.time()
+        hits0 = common.PERF["cached_hits"]
+        try:
+            mod.main(total_req=n, force=args.force and name not in enumerated)
+            status = "ok"
         except Exception as e:  # keep the suite running
-            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
-        print(f"# {name} done in {time.time() - t1:.0f}s\n", flush=True)
+            status = f"{type(e).__name__}: {e}"
+            print(f"# {name} FAILED: {status}", file=sys.stderr)
+        wall = time.time() - t1
+        report["sections"][name] = {
+            "wall_s": round(wall, 2),
+            "total_req": n,
+            "cache_hits": common.PERF["cached_hits"] - hits0,
+            "status": status,
+        }
+        print(f"# {name} done in {wall:.1f}s\n", flush=True)
 
     if not args.skip_roofline and (not only or "roofline" in only):
         try:
@@ -71,7 +165,28 @@ def main() -> None:
             roofline.main()
         except Exception as e:
             print(f"# roofline FAILED: {type(e).__name__}: {e}", file=sys.stderr)
-    print(f"# total {time.time() - t0:.0f}s")
+
+    if not args.no_calibrate:
+        n_cal = 100_000 if args.quick else 300_000
+        report["engine_reqps"] = calibrate_engines(n_cal)
+        print(f"# engine calibration ({n_cal} req): "
+              f"reference={report['engine_reqps']['reference'] / 1e3:.0f}k/s "
+              f"batched={report['engine_reqps']['batched'] / 1e3:.0f}k/s "
+              f"({report['engine_reqps']['speedup']}x)")
+
+    report["suite_wall_s"] = round(time.time() - t0, 1)
+    BENCH_PATH.write_text(json.dumps(report, indent=1))
+    print(f"# total {report['suite_wall_s']:.0f}s -> {BENCH_PATH.name}")
+
+    if args.profile:
+        rps = warm["req"] / max(warm["cpu_s"], 1e-9)
+        print("# profile grid: "
+              f"{warm['req'] / 1e6:.1f}M fresh req in {warm['cpu_s']:.0f}s cpu "
+              f"/ {warm['wall_s']:.0f}s wall ({rps / 1e3:.0f}k req/s/worker), "
+              f"{common.PERF['cached_hits']} cache hits on render")
+        for name, sec in report["sections"].items():
+            print(f"# profile {name}: {sec['wall_s']}s render, "
+                  f"{sec['cache_hits']} cells")
 
 
 if __name__ == "__main__":

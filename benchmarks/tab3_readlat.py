@@ -2,7 +2,7 @@
 (paper: 3.3-25.7 us depending on compaction/GC interference)."""
 from __future__ import annotations
 
-from benchmarks.common import TOTAL_REQ, WORKLOADS, cached_sim, print_csv
+from benchmarks.common import TOTAL_REQ, collect_cells, WORKLOADS, cached_sim, print_csv
 
 
 def run(total_req: int = TOTAL_REQ, force: bool = False):
@@ -16,6 +16,11 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
             "flash_reads_frac": round(r["miss_flash"] / max(r["n"], 1), 4),
         })
     return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
 
 
 def main(total_req: int = TOTAL_REQ, force: bool = False):

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a parallel smoke of the benchmark
+# orchestrator. Mirrors what a GitHub Actions job would run; keep it fast
+# (~10 min on 2 cores).
+#
+#   bash scripts/ci.sh            # everything
+#   bash scripts/ci.sh tests      # tier-1 pytest only
+#   bash scripts/ci.sh bench      # orchestrator smoke only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+STAGE="${1:-all}"
+
+if [[ "$STAGE" == "all" || "$STAGE" == "tests" ]]; then
+  echo "== tier-1: pytest =="
+  # NOTE: hypothesis is an optional dev dependency; tests fall back to
+  # tests/_hypothesis_compat.py when it is absent.
+  python -m pytest -x -q
+fi
+
+if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then
+  echo "== benchmark orchestrator smoke (--quick --jobs 2) =="
+  # Two representative sections: fig14 covers the full 7x8 variant grid,
+  # fig9 covers per-cfg cache keys. --profile prints grid req/s.
+  python -m benchmarks.run --quick --jobs 2 --only fig14,fig9 \
+    --skip-roofline --profile
+  test -f BENCH_sim.json && echo "BENCH_sim.json written"
+fi
+
+echo "CI OK"

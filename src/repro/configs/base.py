@@ -301,6 +301,12 @@ class SimConfig:
     # --- simulation scale ---
     scale: int = 128  # divide all capacities by this (ratios preserved)
     cache_ways: int = 8
+    # --- replay engine ---
+    # "batched": vectorized fast path (core/engine.py), statistically
+    #   bit-compatible with the reference loop; falls back to "reference"
+    #   for configs it cannot reproduce exactly (tpp/astriflash promotion).
+    # "reference": the original per-event Python loop (ground truth).
+    engine: str = "batched"
 
     # ----- derived (scaled) quantities -----
     @property

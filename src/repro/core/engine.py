@@ -1,0 +1,683 @@
+"""Vectorized batched replay engine — the simulator's fast path.
+
+The reference engine in simulator.py retires one request per Python
+iteration (~100-250k req/s). This engine processes each scheduling quantum
+in structure-of-arrays batches instead. Two cooperating fast paths cover
+the run-length spectrum:
+
+  * **Vector chunks** — a NumPy classification pass over the next chunk of
+    the thread's trace resolves runs of *state-stable* accesses in bulk
+    (host-DRAM hits, write-log hits, data-cache hits, logged writes) and
+    locates the first *state-changing boundary*: flash misses (reads and
+    Base-CSSD write misses — channel timing, fills/evictions, GC, context
+    switches), write-log fills (compaction), and page promotions. The
+    whole prefix is retired with a handful of array ops; only the boundary
+    event runs the exact per-event path (the unmodified Machine.serve).
+  * **Inline spans** — when observed fast-run lengths drop below the
+    vectorization break-even (~200 events on a typical box: each NumPy
+    call costs ~1-8 us of dispatch overhead regardless of chunk size), the
+    engine switches to a tuned per-event loop: trace columns converted to
+    native Python lists once per thread, serve()'s state-stable cases
+    inlined with *identical* operation order, and the full serve() only at
+    state-changing events. This floors the engine at ~4-8x the reference
+    loop even in boundary-dense phases (context-switch-heavy variants cap
+    quanta at ~1/miss-rate events, so per-quantum vector overhead cannot
+    amortize there).
+
+Exactness contract (enforced by tests/test_engine.py): for the same seed
+the batched engine produces *identical* results to the reference engine —
+integer counters bit-equal, float accumulators bit-equal as well because
+bulk time/latency accumulation replays the reference's sequential
+left-to-right addition order (np.cumsum chains in the vector path, local
+Python accumulators in the inline path).
+
+How exactness is kept while batching:
+
+  * Dense per-page mirrors of the device state (host-DRAM membership, data
+    cache membership, a 64-bit line bitmask per page for the write log, and
+    per-page promotion counters) enable O(chunk) NumPy membership passes.
+    The mirrors are maintained by thin shadow subclasses of the ssd.py
+    structures, so the exact slow path keeps them in sync for free.
+  * Boundary detection is *predictive*: log-fill positions come from a
+    cumulative count of first-occurrence new (page, line) pairs, promotion
+    positions from per-page running access counts vs the threshold. The
+    first boundary ends the fast prefix; everything before it is provably
+    state-stable under the snapshot.
+  * Within-chunk store-to-load forwarding: a read of a (page, line) pair
+    whose write appears *earlier in the same chunk* is reclassified as a
+    write-log hit (the reference sees the appended line by then).
+  * LRU state is applied lazily but exactly: within a boundary-free prefix,
+    host/cache LRU order only interacts with itself, so replaying one
+    move-to-end per touched page in last-occurrence order yields the same
+    final recency order as the reference's per-event touches.
+
+Stochastic promotion policies ("tpp" consumes RNG per access,
+"astriflash" promotes on every cache-resident touch) leave no usable
+state-stable vector fast path; they are pinned to the inline span, whose
+per-event order keeps even the RNG stream exact.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.configs.base import SimConfig
+from repro.core.simulator import Machine, Thread, _record, _replay_prologue
+from repro.core.ssd import DataCache, WriteLog
+
+# Vectorization break-even: below this expected fast-run length the inline
+# per-event span loop beats per-chunk NumPy dispatch overhead.
+_VEC_MIN = 192
+_CHUNK_MAX = 8192
+# Events to replay inline before re-probing vectorization.
+_SPAN = 1024
+
+
+def supported(cfg: SimConfig) -> bool:
+    """Whether the batched engine reproduces this config exactly.
+
+    Always true today: stochastic promotion policies (tpp/astriflash) are
+    handled by the inline span, which consumes the RNG in the reference's
+    per-event order; only the vector path is disabled for them (see
+    BatchedMachine._inline_only). Kept as an explicit hook for future
+    configs that might need the reference loop.
+    """
+    return True
+
+
+class _ArrayCounts:
+    """Dense per-page promotion counters, API-compatible with the dict
+    Machine.acc_count (only .get and item assignment are used)."""
+
+    __slots__ = ("arr",)
+
+    def __init__(self, page_space: int):
+        self.arr = np.zeros(page_space, np.int64)
+
+    def get(self, page: int, default: int = 0) -> int:
+        return int(self.arr[page])
+
+    def __setitem__(self, page: int, value: int) -> None:
+        self.arr[page] = value
+
+
+class _ShadowHost(OrderedDict):
+    """Host-DRAM LRU with a dense membership mirror. Scalar mirror writes
+    go through a memoryview (~4x cheaper than NumPy scalar indexing); the
+    ndarray view is what the vector path fancy-indexes."""
+
+    def __init__(self, page_space: int):
+        super().__init__()
+        self.arr = np.zeros(page_space, bool)
+        self._mv = memoryview(self.arr)
+
+    def __setitem__(self, page, value) -> None:
+        super().__setitem__(page, value)
+        self._mv[page] = True
+
+    def popitem(self, last: bool = True):
+        page, value = super().popitem(last)
+        self._mv[page] = False
+        return page, value
+
+
+class _ShadowCache(DataCache):
+    """DataCache with a dense membership mirror (memoryview for scalar
+    writes, ndarray for the vector path's bulk reads)."""
+
+    def __init__(self, cfg: SimConfig, page_space: int):
+        super().__init__(cfg)
+        self.arr = np.zeros(page_space, bool)
+        self._mv = memoryview(self.arr)
+
+    def insert(self, page, dirty):
+        ev = super().insert(page, dirty)
+        self._mv[page] = True
+        if ev is not None:
+            self._mv[ev[0]] = False
+        return ev
+
+    def remove(self, page) -> None:
+        super().remove(page)
+        self._mv[page] = False
+
+
+class _ShadowLog(WriteLog):
+    """WriteLog with a per-page 64-bit line-presence bitmask mirror of the
+    active buffer (the old buffer is only non-empty inside _compact, which
+    never overlaps the fast path)."""
+
+    def __init__(self, cfg: SimConfig, page_space: int):
+        super().__init__(cfg)
+        self.bits = np.zeros(page_space, np.uint64)
+
+    def append(self, page, line):
+        self.bits[page] |= np.uint64(1 << line)
+        return super().append(page, line)
+
+    def bulk_append_new(self, pages: np.ndarray, lines: np.ndarray) -> None:
+        # bitwise_or.at: pages may repeat within a batch (several new lines
+        # of one page); plain fancy-index |= would drop all but one OR
+        np.bitwise_or.at(self.bits, pages, np.uint64(1) << lines.astype(np.uint64))
+        super().bulk_append_new(pages, lines)
+
+    def swap_for_compaction(self):
+        self.bits[:] = 0
+        return super().swap_for_compaction()
+
+
+class BatchedMachine(Machine):
+    """Machine whose device structures carry dense NumPy mirrors so whole
+    chunks of the trace can be classified without per-event Python."""
+
+    def __init__(self, cfg: SimConfig, seed: int, page_space: int):
+        super().__init__(cfg, seed)
+        self.page_space = page_space
+        self.cache = _ShadowCache(cfg, page_space)
+        if cfg.enable_write_log:
+            self.log = _ShadowLog(cfg, page_space)
+        self.host = _ShadowHost(page_space)
+        self.acc_count = _ArrayCounts(page_space)
+        # stochastic promotion consumes RNG per access: only the strictly
+        # per-event inline span preserves the draw order
+        self._inline_only = cfg.enable_promotion and cfg.promo_policy != "skybyte"
+        self.chunk = 512  # adaptive: grows on clean chunks, shrinks at boundaries
+        # EWMA of fast-run length (events between state-changing boundaries);
+        # decides vector chunks vs the inline span loop. Start optimistic so
+        # boundary-free configs (dram-only) stay vectorized from event one.
+        self.runlen = float(_VEC_MIN)
+        self._cols = {}  # tid -> native-list trace columns (inline span path)
+        # fast-path latency constants — same expressions as Machine.serve
+        base = cfg.cxl_protocol_ns
+        lat_host = cfg.host_dram_ns
+        lat_log = base + cfg.log_index_ns + cfg.ssd_dram_ns
+        lat_cache = base + cfg.cache_index_ns + cfg.ssd_dram_ns
+        # class codes: 0 host hit, 1 log hit (read), 2 cache hit (read),
+        # 3 logged write, 4 Base-CSSD write hit; -1 = boundary (slow path)
+        self._lat_lut = np.array([lat_host, lat_log, lat_cache, lat_log, lat_cache])
+        self._counting = cfg.enable_promotion and cfg.promo_policy == "skybyte"
+
+    def _columns(self, th: Thread):
+        cols = self._cols.get(th.tid)
+        if cols is None:
+            cols = (th.page.tolist(), th.line.tolist(), th.write.tolist(),
+                    th.gap64.tolist())
+            self._cols[th.tid] = cols
+        return cols
+
+
+def _chain_sum(init: float, vals: np.ndarray) -> float:
+    """Sequential left-to-right float accumulation: init + v0 + v1 + ...
+    in the exact association order the reference's `acc += v` loop uses."""
+    buf = np.empty(vals.size + 1)
+    buf[0] = init
+    buf[1:] = vals
+    return np.cumsum(buf)[-1]
+
+
+def _last_occurrence_order(pages: np.ndarray):
+    """Unique pages ordered by their LAST occurrence. Applying one
+    move-to-end per page in this order reproduces the final LRU order of
+    the reference's per-event touches."""
+    # dict.fromkeys keeps first-seen order; feeding the reversed sequence
+    # makes that last-seen order, reversed back to ascending position
+    d = dict.fromkeys(reversed(pages.tolist()))
+    return reversed(d)
+
+
+def _classify(m: BatchedMachine, cfg: SimConfig, pg, ln, wr):
+    """Class codes for a chunk against the current state snapshot, plus the
+    line-presence mask (for the log bulk append)."""
+    k = len(pg)
+    if cfg.dram_only:
+        return np.zeros(k, np.int8), None
+    hostm = m.host.arr[pg]
+    cachem = m.cache.arr[pg]
+    if m.log is not None:
+        linem = (m.log.bits[pg] >> ln.astype(np.uint64)) & np.uint64(1) != 0
+        cls_r = np.where(linem, np.int8(1), np.where(cachem, np.int8(2), np.int8(-1)))
+        cls = np.where(hostm, np.int8(0), np.where(wr, np.int8(3), cls_r)).astype(np.int8)
+        _forward_log_reads(pg, ln, wr, cls)
+    else:
+        linem = None
+        cls_r = np.where(cachem, np.int8(2), np.int8(-1))
+        cls_w = np.where(cachem, np.int8(4), np.int8(-1))
+        cls = np.where(hostm, np.int8(0), np.where(wr, cls_w, cls_r)).astype(np.int8)
+    return cls, linem
+
+
+def _forward_log_reads(pg, ln, wr, cls) -> None:
+    """Store-to-load forwarding within a chunk: a read of a (page, line)
+    pair first *written* at an earlier chunk position sees the appended
+    line in the write log — reclassify it from cache-hit/miss to log hit,
+    exactly as the reference's log.lookup would."""
+    widx = np.flatnonzero(cls == 3)
+    if not widx.size:
+        return
+    ridx = np.flatnonzero((cls == 2) | (cls == -1) & ~wr)
+    if not ridx.size:
+        return
+    wpairs = pg[widx] * 64 + ln[widx]
+    order = np.argsort(wpairs, kind="stable")
+    sw = wpairs[order]
+    keep = np.empty(sw.size, bool)
+    keep[0] = True
+    np.not_equal(sw[1:], sw[:-1], out=keep[1:])
+    upairs = sw[keep]
+    upos = widx[order][keep]  # earliest write position per pair
+    rpairs = pg[ridx] * 64 + ln[ridx]
+    loc = np.searchsorted(upairs, rpairs)
+    loc[loc == upairs.size] = 0  # clamp; mismatch check below rejects
+    fwd = (upairs[loc] == rpairs) & (upos[loc] < ridx)
+    cls[ridx[fwd]] = 1
+
+
+def _first_boundary(m: BatchedMachine, cfg: SimConfig, pg, ln, cls, linem) -> int:
+    """Index of the first state-changing event in the chunk (len(pg) if
+    none): hard boundaries (cls == -1), predicted write-log fills, and
+    predicted page promotions."""
+    b = len(pg)
+    hard = cls == -1
+    if hard.any():
+        b = int(hard.argmax())
+    if m.log is not None and b > 0:
+        wmask = cls[:b] == 3
+        widx = np.flatnonzero(wmask)
+        # each write adds at most one entry: only worth the exact count
+        # when the active buffer could conceivably fill inside the prefix
+        if widx.size and m.log.active_n + widx.size >= m.log.cap:
+            pairs = pg[widx] * 64 + ln[widx]
+            _, first = np.unique(pairs, return_index=True)
+            isnew = np.zeros(widx.size, bool)
+            fresh = first[~linem[widx][first]]  # pair not in the active log yet
+            isnew[fresh] = True
+            level = m.log.active_n + np.cumsum(isnew)
+            fill = level >= m.log.cap
+            if fill.any():
+                b = min(b, int(widx[fill.argmax()]))
+    if m._counting and b > 0:
+        counted = cls[:b] > 0  # every non-host fast event reaches _maybe_promote
+        cidx = np.flatnonzero(counted)
+        if cidx.size:
+            cp = pg[cidx]
+            # promotion needs a cache-resident page whose counter crosses
+            # the threshold; cheap prescreen before the exact ranking
+            resident = m.cache.arr[cp]
+            maybe = resident & (m.acc_count.arr[cp] + cidx.size >= cfg.promote_threshold)
+            if maybe.any():
+                order = np.argsort(cp, kind="stable")
+                sp = cp[order]
+                newgrp = np.empty(sp.size, bool)
+                newgrp[0] = True
+                np.not_equal(sp[1:], sp[:-1], out=newgrp[1:])
+                idx = np.arange(sp.size)
+                grp_start = np.where(newgrp, idx, 0)
+                np.maximum.accumulate(grp_start, out=grp_start)
+                occ = np.empty(sp.size, np.int64)
+                occ[order] = idx - grp_start
+                projected = m.acc_count.arr[cp] + occ + 1
+                cand = (projected >= cfg.promote_threshold) & resident
+                if cand.any():
+                    b = min(b, int(cidx[cand.argmax()]))
+    return b
+
+
+def _apply_fast_prefix(m: BatchedMachine, cfg: SimConfig, th: Thread,
+                       i: int, b: int, t: float, pg, ln, wr, cls) -> float:
+    """Retire events [i, i+b) of the thread's trace in bulk. All are
+    state-stable under the snapshot; cls is a chunk-local view."""
+    st = m.stats
+    fc = cls[:b]
+    fpg = pg[:b]
+    lats = m._lat_lut[fc]
+    # time: replay the reference's `t += gap; t += lat` sequence exactly
+    buf = np.empty(2 * b + 1)
+    buf[0] = t
+    buf[1::2] = th.gap64[i:i + b]
+    buf[2::2] = lats
+    t = np.cumsum(buf)[-1]
+    # counters
+    hostc = fc == 0
+    st.n += b
+    n_host = int(np.count_nonzero(hostc))
+    if n_host:
+        n_hw = int(np.count_nonzero(hostc & wr[:b]))
+        st.host_r += n_host - n_hw
+        st.host_w += n_hw
+    st.hit_log += int(np.count_nonzero(fc == 1))
+    st.hit_cache += int(np.count_nonzero(fc == 2))
+    st.ssd_w += int(np.count_nonzero(fc >= 3))
+    st.lat_sum = _chain_sum(st.lat_sum, lats)
+    if n_host:
+        st.lat_host = _chain_sum(st.lat_host, lats[hostc])
+    hitm = fc > 0
+    if hitm.any():
+        st.lat_hit = _chain_sum(st.lat_hit, lats[hitm])
+    if cfg.dram_only:
+        return t
+    # lazy-but-exact state application
+    if n_host:
+        move = m.host.move_to_end
+        for p in _last_occurrence_order(fpg[hostc]):
+            move(p)
+    touch = (fc == 2) | (fc == 4)
+    if touch.any():  # cache LRU (read hits + Base-CSSD write hits)
+        m.cache.touch_many(_last_occurrence_order(fpg[touch]))
+    dirty = fc == 4
+    if dirty.any():
+        mark = m.cache.mark_dirty
+        for p in set(fpg[dirty].tolist()):
+            mark(p)
+    logw = fc == 3
+    if logw.any():
+        lpg, lln = fpg[logw], ln[:b][logw]
+        bits = m.log.bits
+        seen = set()
+        np_new, nl_new = [], []
+        for p, l in zip(lpg.tolist(), lln.tolist()):
+            pr = p * 64 + l
+            if pr in seen:
+                continue
+            seen.add(pr)
+            if not int(bits[p]) >> l & 1:
+                np_new.append(p)
+                nl_new.append(l)
+        if np_new:
+            m.log.bulk_append_new(np.asarray(np_new, np.int64),
+                                  np.asarray(nl_new, np.int64))
+    if m._counting:
+        counted = fc > 0
+        if counted.any():
+            # per-page totals via a dict (faster than np.add.at dispatch at
+            # typical chunk sizes); keys are unique, fancy += is safe
+            totals = {}
+            for p in fpg[counted].tolist():
+                totals[p] = totals.get(p, 0) + 1
+            m.acc_count.arr[list(totals)] += list(totals.values())
+    return t
+
+
+def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
+                 wslots, i: int, stop: int):
+    """Exact per-event replay tuned for boundary-dense stretches.
+
+    Trace columns are native Python lists (no per-event NumPy scalar
+    boxing). Every serve() case is transcribed with identical operation
+    order — including misses, write-log fills (direct _compact call) and
+    promotions (direct _maybe_promote call, which also keeps stochastic
+    tpp/astriflash policies exact: the RNG stream is consumed in the same
+    per-event order as the reference). Only the coordinated-context-switch
+    read miss still goes through serve(), whose trigger/park logic ends
+    the quantum anyway. Returns (i, t, blocked).
+    """
+    pages, lines, writes, gaps = m._columns(th)
+    st = m.stats
+    serve = m.serve
+    maybe_promote = m._maybe_promote
+    compact = m._compact
+    host = m.host
+    move_host = host.move_to_end
+    cache = m.cache
+    csets = cache.sets
+    nsets = cache.n_sets
+    log = m.log
+    if log is not None:
+        log_active = log.active
+        log_cap = log.cap
+        # memoryview: python-int scalar get/set is ~4x cheaper than NumPy
+        # scalar indexing; writes go through to the shared array
+        logbits = memoryview(log.bits)
+        an = log.active_n  # hoisted; written back around compactions/serve
+    promoting = cfg.enable_promotion
+    skybyte_count = m._counting  # skybyte policy: cheap threshold precheck
+    acc = memoryview(m.acc_count.arr) if skybyte_count else None
+    promo_thr = cfg.promote_threshold
+    lat_host = cfg.host_dram_ns
+    base = cfg.cxl_protocol_ns
+    cache_idx = cfg.cache_index_ns
+    dram = cfg.ssd_dram_ns
+    lat_log = base + cfg.log_index_ns + dram
+    lat_cache = base + cache_idx + dram
+    ctx_ns = cfg.ctx_switch_ns
+    # miss machinery (write-allocate fills, eviction writebacks): misses
+    # mutate cache membership but are O(1) dict/list/channel ops — in
+    # write-heavy workloads they are ~20% of all events, too frequent to
+    # pay full serve() dispatch for
+    channels_read = m.channels.read
+    channels_write = m.channels.write
+    on_flash_write = m.ftl.on_flash_write
+    cache_insert = cache.insert
+    max_out = cfg.max_outstanding
+    ctx_on = cfg.enable_ctx_switch
+    # local accumulators: same sequential add order as _record, flushed on exit
+    host_r = host_w = hit_log_n = hit_cache_n = miss_n = ssd_w_n = 0
+    slow_n = bnd_n = k = 0
+    lat_sum = st.lat_sum
+    lat_host_acc = st.lat_host
+    lat_hit_acc = st.lat_hit
+    lat_miss_acc = st.lat_miss
+    blocked = False
+    for p, l, w, g in zip(pages[i:stop], lines[i:stop], writes[i:stop],
+                          gaps[i:stop]):
+        t += g
+        k += 1
+        if p in host:
+            move_host(p)
+            if w:
+                host_w += 1
+            else:
+                host_r += 1
+            lat_sum += lat_host
+            lat_host_acc += lat_host
+            t += lat_host
+            continue
+        if w:
+            if log is not None:
+                # cacheline write log append (serve(): append -> compact
+                # if full -> promote)
+                e = log_active.get(p)
+                if e is None or l not in e:
+                    if e is None:
+                        e = log_active[p] = {}
+                    e[l] = True
+                    logbits[p] = logbits[p] | (1 << l)
+                    an += 1
+                    if an >= log_cap:  # filled: drain the old buffer
+                        log.active_n = an
+                        compact(t)
+                        log_active = log.active
+                        an = log.active_n
+                        bnd_n += 1
+                lat = lat_log
+            else:
+                s = csets[p % nsets]
+                d = s.get(p)
+                if d is not None:
+                    s.move_to_end(p)
+                    if not d:
+                        s[p] = True  # mark_dirty
+                    lat = lat_cache
+                else:
+                    # Base-CSSD write miss: posted store, background page
+                    # fetch in a write slot (transcribed from serve())
+                    stall = 0.0
+                    if len(wslots) >= max_out:
+                        oldest = min(wslots)
+                        wslots.remove(oldest)
+                        if oldest > t:
+                            stall = oldest - t
+                    wslots.append(channels_read(p, t + stall))
+                    ev = cache_insert(p, True)
+                    if ev is not None and ev[1]:
+                        channels_write(ev[0], t)
+                        on_flash_write(t)
+                        st.flash_write_pages += 1
+                    bnd_n += 1
+                    lat = stall + base + cache_idx + dram
+            if promoting:
+                if skybyte_count:
+                    c = acc[p] + 1
+                    if c >= promo_thr and csets[p % nsets].get(p) is not None:
+                        maybe_promote(p, t)
+                        bnd_n += 1
+                    else:
+                        acc[p] = c
+                else:  # tpp / astriflash: exact per-event RNG order
+                    maybe_promote(p, t)
+            ssd_w_n += 1
+            lat_sum += lat
+            lat_hit_acc += lat
+            t += lat
+            continue
+        # ---- read ----
+        if log is not None:
+            e = log_active.get(p)
+            if e is not None and l in e:
+                if promoting:
+                    if skybyte_count:
+                        c = acc[p] + 1
+                        if c >= promo_thr and csets[p % nsets].get(p) is not None:
+                            maybe_promote(p, t)
+                            bnd_n += 1
+                        else:
+                            acc[p] = c
+                    else:
+                        maybe_promote(p, t)
+                hit_log_n += 1
+                lat_sum += lat_log
+                lat_hit_acc += lat_log
+                t += lat_log
+                continue
+        s = csets[p % nsets]
+        d = s.get(p)
+        if d is not None:
+            s.move_to_end(p)
+            if promoting:
+                if skybyte_count:
+                    c = acc[p] + 1
+                    if c >= promo_thr:  # resident -> promotion fires
+                        maybe_promote(p, t)
+                        bnd_n += 1
+                    else:
+                        acc[p] = c
+                else:
+                    maybe_promote(p, t)
+            hit_cache_n += 1
+            lat_sum += lat_cache
+            lat_hit_acc += lat_cache
+            t += lat_cache
+            continue
+        if not ctx_on:
+            # flash read miss (transcribed from serve())
+            done = channels_read(p, t)
+            ev = cache_insert(p, False)
+            if ev is not None and ev[1]:
+                channels_write(ev[0], t)
+                on_flash_write(t)
+                st.flash_write_pages += 1
+            if promoting:
+                if skybyte_count:
+                    c = acc[p] + 1
+                    if c >= promo_thr:  # just inserted -> resident
+                        maybe_promote(p, t)
+                        bnd_n += 1
+                    else:
+                        acc[p] = c
+                else:
+                    maybe_promote(p, t)
+            bnd_n += 1
+            lat = (done - t) + base + cache_idx + dram
+            miss_n += 1
+            lat_sum += lat
+            lat_miss_acc += lat
+            t += lat
+            continue
+        # ---- coordinated-context-switch read miss: serve() decides the
+        # trigger and parks the thread (gap already charged) ----
+        slow_n += 1
+        if log is not None:
+            log.active_n = an
+        lat, blocked_until, scls = serve(p, l, w, t, wslots)
+        if log is not None:
+            log_active = log.active  # compaction inside serve swaps buffers
+            an = log.active_n
+        if blocked_until is not None:
+            th.ready = blocked_until
+            th.replay = True
+            t += ctx_ns
+            k -= 1  # squashed access: replayed later, not retired now
+            blocked = True
+            break
+        # host/log/cache were checked above, so this can only be a flash
+        # miss the estimator chose not to switch on
+        t += lat
+        lat_sum += lat
+        miss_n += 1
+        lat_miss_acc += lat
+    if log is not None:
+        log.active_n = an
+    if k:
+        m.runlen += 0.25 * (k / (slow_n + bnd_n + 1) - m.runlen)
+    st.n += k
+    st.host_r += host_r
+    st.host_w += host_w
+    st.hit_log += hit_log_n
+    st.hit_cache += hit_cache_n
+    st.miss_flash += miss_n
+    st.ssd_w += ssd_w_n
+    st.lat_sum = lat_sum
+    st.lat_host = lat_host_acc
+    st.lat_hit = lat_hit_acc
+    st.lat_miss = lat_miss_acc
+    # k counts retired events; on a block the squashed access sits at i + k
+    # and is replayed when the thread wakes (same as the reference loop)
+    return i + k, t, blocked
+
+
+def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
+                    wslots) -> float:
+    """Run one scheduling quantum with the batched engine. Semantically
+    identical to simulator._reference_quantum."""
+    i, n = th.i, th.n
+    if th.replay:
+        i, t = _replay_prologue(m, cfg, th, t)
+    blocked = False
+    while i < n and not blocked:
+        if (m.runlen < _VEC_MIN or m._inline_only) and not cfg.dram_only:
+            # boundary-dense stretch: inline replay beats per-chunk NumPy
+            # dispatch (each array op costs fixed ~1-8us regardless of size);
+            # the span reports observed run lengths back into the EWMA so
+            # the engine re-vectorizes when runs lengthen again
+            i, t, blocked = _inline_span(m, cfg, th, t, wslots, i,
+                                         min(i + _SPAN, n))
+            continue
+        j = min(i + m.chunk, n)
+        pg = th.page[i:j]
+        ln = th.line[i:j]
+        wr = th.write[i:j]
+        cls, linem = _classify(m, cfg, pg, ln, wr)
+        b = _first_boundary(m, cfg, pg, ln, cls, linem)
+        if b > 0:
+            t = _apply_fast_prefix(m, cfg, th, i, b, t, pg, ln, wr, cls)
+            i += b
+        if b < len(pg):  # boundary inside the chunk
+            m.runlen += 0.25 * (b - m.runlen)
+            # exact slow path for the state-changing event
+            t = t + th.gap64[i]
+            lat, blocked_until, scls = m.serve(int(pg[b]), int(ln[b]),
+                                               bool(wr[b]), t, wslots)
+            if blocked_until is not None:
+                th.ready = blocked_until
+                th.replay = True
+                t += cfg.ctx_switch_ns
+                blocked = True
+            else:
+                t += lat
+                _record(m.stats, scls, lat)
+                i += 1
+            m.chunk = max(_VEC_MIN, min(_CHUNK_MAX, 2 * b + 32))
+        else:
+            m.chunk = min(_CHUNK_MAX, m.chunk * 2)
+    th.i = i
+    return t

@@ -24,11 +24,23 @@ MacSim are confined to sub-100ns effects and documented in DESIGN.md):
                     the squashed original is excluded from AMAT (§VI-D).
 
 Scheduling policies: RR / RANDOM / CFS (default, vruntime-based).
+
+Two replay engines share the scheduler (SimConfig.engine):
+  "reference" — the original pure-Python per-event loop (ground truth);
+  "batched"   — the vectorized fast path in engine.py, which resolves runs
+                of state-stable accesses with NumPy bulk passes and drops
+                to the exact per-event path at state-changing boundaries.
+Both produce identical Stats (see tests/test_engine.py).
 """
 from __future__ import annotations
 
+import dataclasses
+import os
 import random
-from typing import Any, Dict, List
+from collections import OrderedDict
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
 
 from repro.configs.base import SimConfig
 from repro.core.ssd import Channels, DataCache, Ftl, WriteLog
@@ -59,15 +71,18 @@ class Stats:
 
 
 class Thread:
-    __slots__ = ("tid", "page", "line", "write", "gap", "i", "n", "ready",
-                 "vruntime", "last_sched", "running", "replay", "done")
+    __slots__ = ("tid", "page", "line", "write", "gap64", "i", "n",
+                 "ready", "vruntime", "last_sched", "running", "replay", "done")
 
     def __init__(self, tid: int, trace: Dict):
         self.tid = tid
         self.page = trace["page"]
         self.line = trace["line"]
         self.write = trace["write"]
-        self.gap = trace["gap_ns"]
+        # Traces carry float32 gaps; accumulate core time in float64 — a
+        # float32 timeline loses whole-ns resolution past ~16ms of sim time
+        # (1 ulp at 1e9 ns is 64 ns, bigger than every SSD-DRAM latency).
+        self.gap64 = np.asarray(trace["gap_ns"], dtype=np.float64)
         self.i = 0
         self.n = len(self.page)
         self.ready = 0.0
@@ -85,7 +100,7 @@ class Machine:
         self.ftl = Ftl(cfg, self.channels)
         self.cache = DataCache(cfg)
         self.log = WriteLog(cfg) if cfg.enable_write_log else None
-        self.host: "OrderedDict[int, bool]" = __import__("collections").OrderedDict()
+        self.host: "OrderedDict[int, bool]" = OrderedDict()
         self.host_cap = max(cfg.host_pages, 1)
         self.acc_count: Dict[int, int] = {}
         self.stats = Stats()
@@ -233,6 +248,77 @@ class Machine:
 _CLS_LAT = ("host_r", "host_w", "hit_log", "hit_cache", "miss_flash", "ssd_w")
 
 
+def _record(st: Stats, cls: str, lat: float) -> None:
+    """Charge one retired request to the Stats counters."""
+    st.n += 1
+    st.lat_sum += lat
+    if cls == "host_r":
+        st.host_r += 1
+        st.lat_host += lat
+    elif cls == "host_w":
+        st.host_w += 1
+        st.lat_host += lat
+    elif cls == "hit_log":
+        st.hit_log += 1
+        st.lat_hit += lat
+    elif cls == "hit_cache":
+        st.hit_cache += 1
+        st.lat_hit += lat
+    elif cls == "ssd_w":
+        st.ssd_w += 1
+        st.lat_hit += lat
+    else:
+        st.miss_flash += 1
+        st.lat_miss += lat
+
+
+def _replay_prologue(m: Machine, cfg: SimConfig, th: Thread, t: float):
+    """Re-issue of a context-switched access (§III-A 4): charged as an SSD
+    DRAM hit; the squashed original was excluded from AMAT. Returns the new
+    (i, t) after consuming the replayed access."""
+    th.replay = False
+    lat = cfg.cxl_protocol_ns + cfg.cache_index_ns + cfg.ssd_dram_ns
+    t += lat
+    _record(m.stats, "hit_cache", lat)
+    m.stats.replays += 1
+    return th.i + 1, t
+
+
+def _run_span(m: Machine, cfg: SimConfig, th: Thread, t: float, wslots,
+              i: int, stop: int) -> Tuple[int, float, bool]:
+    """Exact per-event replay of th's trace events [i, stop).
+
+    Returns (next_i, t, blocked). On a coordinated context switch the
+    blocked access is NOT consumed (it is replayed after wakeup)."""
+    page_a, line_a, write_a, gap_a = th.page, th.line, th.write, th.gap64
+    serve = m.serve
+    st = m.stats
+    while i < stop:
+        t += gap_a[i]
+        lat, blocked_until, cls = serve(int(page_a[i]), int(line_a[i]),
+                                        bool(write_a[i]), t, wslots)
+        if blocked_until is not None:
+            th.ready = blocked_until
+            th.replay = True
+            t += cfg.ctx_switch_ns  # core-side switch cost
+            return i, t, True
+        t += lat
+        _record(st, cls, lat)
+        i += 1
+    return i, t, False
+
+
+def _reference_quantum(m: Machine, cfg: SimConfig, th: Thread, t: float,
+                       wslots) -> float:
+    """Run one scheduling quantum with the per-event reference engine."""
+    i = th.i
+    if th.replay:  # replayed access after a context switch (§III-A 4)
+        i, t = _replay_prologue(m, cfg, th, t)
+    i, t, _ = _run_span(m, cfg, th, t, wslots, i, th.n)
+    th.i = i
+    return t
+
+
 def simulate(
     workload: str,
     variant: str,
@@ -247,52 +333,56 @@ def simulate(
     variant's thread count (the paper runs the same program with 8 or 24
     threads; more threads never means more work). ``n_threads`` overrides
     the variant default (thread-scaling studies, Fig 15/22).
+
+    ``cfg.engine`` selects the replay engine: "batched" (default) uses the
+    vectorized fast path in engine.py and falls back to the reference loop
+    for configurations it does not support (stochastic promotion policies);
+    "reference" forces the original per-event loop. Both engines produce
+    identical statistics for the same seed.
     """
     cfg = cfg.variant(variant)
     if n_threads:
-        cfg = __import__("dataclasses").replace(cfg, n_threads=n_threads)
+        cfg = dataclasses.replace(cfg, n_threads=n_threads)
+    env_engine = os.environ.get("REPRO_SIM_ENGINE")
+    if env_engine:
+        cfg = dataclasses.replace(cfg, engine=env_engine)
+    if cfg.engine not in ("reference", "batched"):
+        raise ValueError(f"unknown SimConfig.engine: {cfg.engine!r}")
     n_req = max(total_req // cfg.n_threads, 1)
     traces = gen_traces(workload, cfg.n_threads, n_req, seed=seed, scale=cfg.scale)
     threads = [Thread(t, tr) for t, tr in enumerate(traces)]
-    m = Machine(cfg, seed)
+
+    use_batched = cfg.engine == "batched"
+    if use_batched:
+        from repro.core import engine as _engine
+
+        use_batched = _engine.supported(cfg)
+    if use_batched:
+        page_space = int(max(tr["n_pages"] for tr in traces))
+        m = _engine.BatchedMachine(cfg, seed, page_space)
+        runner = _engine.batched_quantum
+    else:
+        m = Machine(cfg, seed)
+        runner = _reference_quantum
+
     st = m.stats
     n_cores = cfg.n_cores
     cores = [0.0] * n_cores
     wslots_per_core: List[List[float]] = [[] for _ in range(n_cores)]
     policy = cfg.sched_policy
     sched_counter = 0
-    pending = set(range(len(threads)))
+    # alive keeps thread-index order, so candidate lists (and their
+    # tie-breaks) match a scan over the full thread table
+    alive = list(threads)
 
-    def record(cls: str, lat: float) -> None:
-        st.n += 1
-        st.lat_sum += lat
-        if cls == "host_r":
-            st.host_r += 1
-            st.lat_host += lat
-        elif cls == "host_w":
-            st.host_w += 1
-            st.lat_host += lat
-        elif cls == "hit_log":
-            st.hit_log += 1
-            st.lat_hit += lat
-        elif cls == "hit_cache":
-            st.hit_cache += 1
-            st.lat_hit += lat
-        elif cls == "ssd_w":
-            st.ssd_w += 1
-            st.lat_hit += lat
-        else:
-            st.miss_flash += 1
-            st.lat_miss += lat
-
-    while pending:
-        # core with the earliest time
-        c = min(range(n_cores), key=cores.__getitem__)
-        t_now = cores[c]
-        cand = [th for ti, th in enumerate(threads)
-                if ti in pending and not th.running and th.ready <= t_now]
+    while alive:
+        # core with the earliest time (first minimal index, like
+        # min(range, key))
+        t_now = min(cores)
+        c = cores.index(t_now)
+        cand = [th for th in alive if not th.running and th.ready <= t_now]
         if not cand:
-            waits = [threads[ti].ready for ti in pending if not threads[ti].running]
+            waits = [th.ready for th in alive if not th.running]
             if not waits:  # all pending threads running on other cores
                 cores[c] = min(x for x in cores if x > t_now) if any(
                     x > t_now for x in cores) else t_now + 1.0
@@ -310,38 +400,12 @@ def simulate(
         th.running = True
         t = max(t_now, th.ready)
         t0 = t
-
-        page_a, line_a, write_a, gap_a = th.page, th.line, th.write, th.gap
-        i, n = th.i, th.n
-        serve = m.serve
-        wslots = wslots_per_core[c]
-        blocked = False
-        if th.replay:  # replayed access after a context switch (§III-A 4)
-            th.replay = False
-            lat = cfg.cxl_protocol_ns + cfg.cache_index_ns + cfg.ssd_dram_ns
-            t += lat
-            record("hit_cache", lat)
-            st.replays += 1
-            i += 1
-        while i < n:
-            t += gap_a[i]
-            lat, blocked_until, cls = serve(int(page_a[i]), int(line_a[i]),
-                                            bool(write_a[i]), t, wslots)
-            if blocked_until is not None:
-                th.ready = blocked_until
-                th.replay = True
-                t += cfg.ctx_switch_ns  # core-side switch cost
-                blocked = True
-                break
-            t += lat
-            record(cls, lat)
-            i += 1
-        th.i = i
+        t = runner(m, cfg, th, t, wslots_per_core[c])
         th.vruntime += t - t0
         th.running = False
-        if i >= n and not th.replay:
+        if th.i >= th.n and not th.replay:
             th.done = True
-            pending.discard(th.tid)
+            alive.remove(th)
         cores[c] = t
 
     exec_ns = max(cores)

@@ -149,6 +149,19 @@ class WriteLog:
             self.active_n += 1
         return self.active_n >= self.cap
 
+    def bulk_append_new(self, pages, lines) -> None:
+        """Append a batch of (page, line) entries known to be absent from
+        the active buffer, in order (page insertion order is observable at
+        compaction time through the channel timeline). Used by the batched
+        engine; must never fill the log (the caller bounds the batch)."""
+        act = self.active
+        for p, l in zip(pages.tolist(), lines.tolist()):
+            e = act.get(p)
+            if e is None:
+                e = act[p] = {}
+            e[l] = True
+        self.active_n += len(pages)
+
     def swap_for_compaction(self) -> Dict[int, Dict[int, bool]]:
         old = self.active
         self.old = old
@@ -203,6 +216,14 @@ class DataCache:
         s = self._set(page)
         if page in s:
             s[page] = True
+
+    def touch_many(self, pages) -> None:
+        """Refresh LRU recency for a batch of resident pages, in order."""
+        sets = self.sets
+        n_sets = self.n_sets
+        for p in pages:
+            s = sets[p % n_sets]
+            s.move_to_end(p)
 
     def remove(self, page: int) -> None:
         self._set(page).pop(page, None)

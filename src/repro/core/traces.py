@@ -154,7 +154,10 @@ def gen_thread_trace(
     page_arr = np.repeat(pages, run_len)[:n_req]
     # line index within the page's covered set, walking sequentially per run
     start = rng.integers(0, LINES_PER_PAGE, n_visits)
-    offsets = np.concatenate([np.arange(r) for r in run_len])[:n_req]
+    # per-run 0..r-1 ramps, vectorized: global position minus own run's start
+    total = int(run_len.sum())
+    run_starts = np.repeat(np.cumsum(run_len) - run_len, run_len)
+    offsets = (np.arange(total) - run_starts)[:n_req]
     base = np.repeat(start, run_len)[:n_req]
     cov = pg_cov[page_arr]
     line_arr = ((base + offsets) % np.maximum(cov, 1)).astype(np.int8)

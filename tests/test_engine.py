@@ -1,0 +1,88 @@
+"""Batched replay engine exactness + determinism (core/engine.py).
+
+The contract: for the same seed, engine="batched" produces the same stats
+as engine="reference" — integer counters exactly, float accumulators and
+exec_ns within float tolerance (in practice they are bit-equal: the fast
+path replays the reference's sequential addition order)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SimConfig, VARIANTS
+from repro.core.simulator import simulate
+
+N = 6_000  # small but enough to exercise misses, promotions, compactions
+WORKLOADS = ("bfs-dense", "srad", "tpcc")
+
+
+def _run(engine, workload, variant, n=N, seed=0, **overrides):
+    cfg = dataclasses.replace(SimConfig(), engine=engine, **overrides)
+    return simulate(workload, variant, cfg, total_req=n, seed=seed)
+
+
+def _assert_same(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        x, y = a[k], b[k]
+        if isinstance(x, (float, np.floating)) or isinstance(y, (float, np.floating)):
+            assert float(x) == pytest.approx(float(y), rel=1e-12, abs=1e-9), \
+                (k, x, y)
+        else:  # ints, strings, None
+            assert x == y, (k, x, y)
+
+
+@pytest.mark.parametrize("workload", WORKLOADS)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_engine_parity(workload, variant):
+    """Batched == reference across the full paper ablation grid."""
+    _assert_same(_run("reference", workload, variant),
+                 _run("batched", workload, variant))
+
+
+def test_engine_parity_compaction_heavy():
+    """A small write log forces many compaction cycles through the fast
+    path's log-fill boundary prediction."""
+    over = dict(write_log_bytes=16 << 20)
+    _assert_same(_run("reference", "srad", "skybyte-w", **over),
+                 _run("batched", "srad", "skybyte-w", **over))
+
+
+def test_engine_parity_demotion_pressure():
+    """A tiny host DRAM budget exercises promotion + demotion churn."""
+    over = dict(host_dram_bytes=64 << 20)
+    _assert_same(_run("reference", "dlrm", "skybyte-full", **over),
+                 _run("batched", "dlrm", "skybyte-full", **over))
+
+
+@pytest.mark.parametrize("policy", ["RR", "RANDOM"])
+def test_engine_parity_sched_policies(policy):
+    """Scheduling policy decisions (incl. the RANDOM rng stream) are shared
+    by both engines."""
+    over = dict(sched_policy=policy)
+    _assert_same(_run("reference", "bc", "skybyte-full", **over),
+                 _run("batched", "bc", "skybyte-full", **over))
+
+
+def test_engine_seed_determinism():
+    """Same seed -> identical output dict; different seed -> different."""
+    a = _run("batched", "bc", "skybyte-full", seed=3)
+    b = _run("batched", "bc", "skybyte-full", seed=3)
+    c = _run("batched", "bc", "skybyte-full", seed=4)
+    _assert_same(a, b)
+    assert a["exec_ns"] == b["exec_ns"]
+    assert a["exec_ns"] != c["exec_ns"]
+
+
+def test_engine_fallback_policies():
+    """tpp/astriflash promotion consume RNG per access; the batched engine
+    must fall back to the reference loop and still match it exactly."""
+    for policy in ("tpp", "astriflash"):
+        over = dict(promo_policy=policy)
+        _assert_same(_run("reference", "srad", "skybyte-cp", **over),
+                     _run("batched", "srad", "skybyte-cp", **over))
+
+
+def test_engine_unknown_rejected():
+    with pytest.raises(ValueError):
+        _run("warp-drive", "srad", "base-cssd")

@@ -1,9 +1,13 @@
-"""Simulator behaviour + property-based invariants (hypothesis)."""
+"""Simulator behaviour + property-based invariants.
+
+Property tests use hypothesis when installed (optional dev dependency:
+``pip install hypothesis``) and fall back to the deterministic sampler in
+_hypothesis_compat otherwise, so the suite collects and runs either way."""
 import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import SimConfig
 from repro.core.simulator import simulate
