@@ -42,8 +42,12 @@ VARIANTS = ("base-cssd", "skybyte-c", "skybyte-p", "skybyte-w",
 # through multiple compaction cycles (steady state)
 TOTAL_REQ = 1_500_000
 
-# perf accounting for --profile / BENCH_sim.json (per-process)
-PERF = {"fresh_req": 0, "fresh_wall": 0.0, "cached_hits": 0}
+# perf accounting for --profile / BENCH_sim.json (per-process). The
+# cls_cache_* counters aggregate the batched engine's classification-cache
+# behaviour over every fresh cell this process simulates (engine.CACHE_STATS
+# is reset per simulate() call, so it is drained here).
+PERF = {"fresh_req": 0, "fresh_wall": 0.0, "cached_hits": 0,
+        "cls_cache_checks": 0, "cls_cache_clean": 0, "cls_cache_repairs": 0}
 
 
 def _code_fingerprint() -> str:
@@ -129,21 +133,31 @@ def cached_sim(workload: str, variant: str, cfg: SimConfig = SimConfig(),
     wall = time.time() - t0
     PERF["fresh_req"] += out["n"]
     PERF["fresh_wall"] += wall
+    from repro.core.engine import CACHE_STATS
+
+    PERF["cls_cache_checks"] += CACHE_STATS["checks"]
+    PERF["cls_cache_clean"] += CACHE_STATS["clean"]
+    PERF["cls_cache_repairs"] += CACHE_STATS["repairs"]
     out["wall_s"] = round(wall, 1)
     path.write_text(json.dumps(out, indent=1, default=float))
     return json.loads(path.read_text())
 
 
-def _warm_one(spec: Dict[str, Any]) -> Tuple[str, int, float, str]:
+def _warm_one(spec: Dict[str, Any]) -> Tuple[str, int, float, str, Tuple]:
     """Worker: compute one cell into the artifact cache. Returns
-    (cell name, requests simulated, wall seconds, error or ""). A failing
-    cell must not kill the suite — it costs only its own figures."""
+    (cell name, requests simulated, wall seconds, error or "", engine
+    cache counters). A failing cell must not kill the suite — it costs
+    only its own figures."""
     name = f"{spec['workload']}/{spec['variant']}"
+    c0 = (PERF["cls_cache_checks"], PERF["cls_cache_clean"],
+          PERF["cls_cache_repairs"])
     try:
         r = cached_sim(**spec)
     except Exception as e:  # noqa: BLE001 - containment boundary
-        return name, 0, 0.0, f"{type(e).__name__}: {e}"
-    return name, r.get("n", 0), r.get("wall_s", 0.0), ""
+        return name, 0, 0.0, f"{type(e).__name__}: {e}", (0, 0, 0)
+    cls = (PERF["cls_cache_checks"] - c0[0], PERF["cls_cache_clean"] - c0[1],
+           PERF["cls_cache_repairs"] - c0[2])
+    return name, r.get("n", 0), r.get("wall_s", 0.0), "", cls
 
 
 def dedupe_cells(cells: List[Dict[str, Any]],
@@ -170,7 +184,9 @@ def warm_cache(cells: List[Dict[str, Any]], jobs: int = 1,
     worker processes. Returns aggregate perf numbers."""
     todo = dedupe_cells(cells, force=force)
     stats = {"cells_total": len(cells), "cells_run": len(todo),
-             "req": 0, "cpu_s": 0.0, "wall_s": 0.0}
+             "req": 0, "cpu_s": 0.0, "wall_s": 0.0,
+             "cls_cache_checks": 0, "cls_cache_clean": 0,
+             "cls_cache_repairs": 0}
     if not todo:
         return stats
     ART.mkdir(parents=True, exist_ok=True)
@@ -183,9 +199,12 @@ def warm_cache(cells: List[Dict[str, Any]], jobs: int = 1,
     jobs = max(1, min(jobs, len(todo)))
 
     def drain(results) -> None:
-        for k, (name, req, wall, err) in enumerate(results):
+        for k, (name, req, wall, err, cls) in enumerate(results):
             stats["req"] += req
             stats["cpu_s"] += wall
+            stats["cls_cache_checks"] += cls[0]
+            stats["cls_cache_clean"] += cls[1]
+            stats["cls_cache_repairs"] += cls[2]
             if err:
                 stats["failed"] = stats.get("failed", 0) + 1
                 print(f"# warm [{k + 1}/{len(todo)}] {name} FAILED: {err}",

@@ -66,23 +66,44 @@ SECTIONS = [
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
 
 
+# Calibration cells: a ctx-switch-bound cell (short quanta — the regime
+# the classification cache targets), the paper's headline configuration,
+# and a boundary-free cell (pure vector path).
+CALIBRATION_CELLS = (
+    ("bfs-dense", "skybyte-c"),
+    ("bfs-dense", "skybyte-full"),
+    ("ycsb", "dram-only"),
+)
+
+
 def calibrate_engines(total_req: int = 200_000) -> dict:
-    """Measure replay throughput of both engines on one calibration cell
-    (skybyte-full / bfs-dense — the paper's headline configuration)."""
+    """Per-cell replay throughput of both engines (req/s, CPU time — wall
+    clock on shared CI boxes is steal-noisy) plus the batched engine's
+    classification-cache hit/repair rates and counters."""
+    from repro.core import engine as _engine
+
     # suspend any --engine override: the whole point is comparing both
     forced = os.environ.pop("REPRO_SIM_ENGINE", None)
     out = {}
     try:
-        for engine in ("reference", "batched"):
-            cfg = dataclasses.replace(SimConfig(), engine=engine)
-            t0 = time.time()
-            r = simulate("bfs-dense", "skybyte-full", cfg, total_req=total_req,
-                         seed=0)
-            out[engine] = round(r["n"] / (time.time() - t0), 1)
+        for workload, variant in CALIBRATION_CELLS:
+            cell = {}
+            for engine in ("reference", "batched"):
+                cfg = dataclasses.replace(SimConfig(), engine=engine)
+                t0 = time.process_time()
+                r = simulate(workload, variant, cfg, total_req=total_req,
+                             seed=0)
+                cell[engine] = round(r["n"] / max(
+                    time.process_time() - t0, 1e-9), 1)
+            cell["speedup"] = round(
+                cell["batched"] / max(cell["reference"], 1e-9), 2)
+            cell["cache"] = dict(_engine.CACHE_STATS)
+            cell["cache_hit_rate"] = round(_engine.cache_hit_rate(), 4)
+            cell["cache_repair_rate"] = round(_engine.cache_repair_rate(), 4)
+            out[f"{workload}/{variant}"] = cell
     finally:
         if forced is not None:
             os.environ["REPRO_SIM_ENGINE"] = forced
-    out["speedup"] = round(out["batched"] / max(out["reference"], 1e-9), 2)
     return out
 
 
@@ -169,10 +190,12 @@ def main(argv=None) -> None:
     if not args.no_calibrate:
         n_cal = 100_000 if args.quick else 300_000
         report["engine_reqps"] = calibrate_engines(n_cal)
-        print(f"# engine calibration ({n_cal} req): "
-              f"reference={report['engine_reqps']['reference'] / 1e3:.0f}k/s "
-              f"batched={report['engine_reqps']['batched'] / 1e3:.0f}k/s "
-              f"({report['engine_reqps']['speedup']}x)")
+        for cell, c in report["engine_reqps"].items():
+            print(f"# engine calibration {cell} ({n_cal} req): "
+                  f"reference={c['reference'] / 1e3:.0f}k/s "
+                  f"batched={c['batched'] / 1e3:.0f}k/s ({c['speedup']}x, "
+                  f"cache hit={c['cache_hit_rate']:.0%} "
+                  f"repair={c['cache_repair_rate']:.0%})")
 
     report["suite_wall_s"] = round(time.time() - t0, 1)
     BENCH_PATH.write_text(json.dumps(report, indent=1))

@@ -1,0 +1,96 @@
+"""Diff a fresh BENCH_sim.json against the committed reference baseline.
+
+Fails (exit 1) when any section's wall clock regresses by more than
+--tolerance (default 20%) relative to BENCH_baseline.json, or when a
+baseline section is missing from the fresh run. Sections only present in
+the fresh run are reported but never fail (new benchmarks are not
+regressions).
+
+Wall clocks on shared CI boxes are steal-noisy, so the check is applied to
+per-section render wall AND to the grid's cpu seconds (the more stable
+signal); --tolerance applies to both.
+
+  PYTHONPATH=src python scripts/bench_diff.py \
+      --baseline BENCH_baseline.json --fresh BENCH_sim.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _section_walls(report: dict) -> dict:
+    return {name: sec.get("wall_s", 0.0)
+            for name, sec in report.get("sections", {}).items()
+            if sec.get("status") == "ok"}
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
+    """Returns a list of human-readable regression strings (empty = pass)."""
+    problems = []
+    base_w = _section_walls(baseline)
+    fresh_w = _section_walls(fresh)
+    for name, bw in sorted(base_w.items()):
+        if name not in fresh_w:
+            # partial runs (ci.sh smokes a section subset) are fine; a
+            # section that RAN but errored is caught by _section_walls
+            # requiring status == "ok" on the fresh side below
+            if name in fresh.get("sections", {}):
+                problems.append(f"section {name}: status "
+                                f"{fresh['sections'][name].get('status')!r}")
+            continue
+        fw = fresh_w[name]
+        # sub-second sections are render-only (warm cache); absolute jitter
+        # there is scheduling noise, not regression
+        if bw >= 1.0 and fw > bw * (1.0 + tolerance):
+            problems.append(f"section {name}: {fw:.2f}s vs baseline "
+                            f"{bw:.2f}s (+{(fw / bw - 1.0) * 100:.0f}%)")
+    bg = baseline.get("grid", {}).get("cpu_s", 0.0)
+    fg = fresh.get("grid", {}).get("cpu_s", 0.0)
+    bn = baseline.get("grid", {}).get("cells_run", 0)
+    fn = fresh.get("grid", {}).get("cells_run", 0)
+    # grid cpu is only comparable when both runs simulated the same number
+    # of fresh cells (a warm cache makes cpu_s ~0)
+    if bn and fn == bn and bg >= 1.0 and fg > bg * (1.0 + tolerance):
+        problems.append(f"grid cpu: {fg:.0f}s vs baseline {bg:.0f}s "
+                        f"(+{(fg / bg - 1.0) * 100:.0f}%) over {fn} cells")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--fresh", default="BENCH_sim.json")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional regression (default 0.20)")
+    args = ap.parse_args(argv)
+    bpath, fpath = Path(args.baseline), Path(args.fresh)
+    if not bpath.exists():
+        print(f"# bench_diff: no baseline at {bpath}; skipping "
+              f"(commit one from a quiet run of this machine class)")
+        return 0
+    if not fpath.exists():
+        print(f"bench_diff: fresh report {fpath} not found", file=sys.stderr)
+        return 1
+    baseline = json.loads(bpath.read_text())
+    fresh = json.loads(fpath.read_text())
+    if baseline.get("quick") != fresh.get("quick"):
+        print("# bench_diff: baseline and fresh runs used different --quick "
+              "settings; sections are not comparable, skipping")
+        return 0
+    problems = compare(baseline, fresh, args.tolerance)
+    if problems:
+        print("bench_diff: wall-clock regressions beyond "
+              f"{args.tolerance:.0%}:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(f"# bench_diff: {len(_section_walls(fresh))} sections within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

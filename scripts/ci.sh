@@ -1,16 +1,25 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + a parallel smoke of the benchmark
-# orchestrator. Mirrors what a GitHub Actions job would run; keep it fast
-# (~10 min on 2 cores).
+# CI entry point: engine-parity smoke + tier-1 tests + a parallel smoke of
+# the benchmark orchestrator diffed against the committed baseline.
+# Mirrors what a GitHub Actions job would run; keep it fast (~10 min on
+# 2 cores).
 #
 #   bash scripts/ci.sh            # everything
+#   bash scripts/ci.sh parity     # engine-parity smoke only (~15 s)
 #   bash scripts/ci.sh tests      # tier-1 pytest only
-#   bash scripts/ci.sh bench      # orchestrator smoke only
+#   bash scripts/ci.sh bench      # orchestrator smoke + baseline diff
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 STAGE="${1:-all}"
+
+if [[ "$STAGE" == "all" || "$STAGE" == "parity" ]]; then
+  echo "== engine parity smoke (ctx-bound + stable-state, both engines) =="
+  # Runs before everything else: if the batched engine's classification
+  # cache breaks bit-compatibility, fail in seconds, not after the suite.
+  python scripts/parity_smoke.py
+fi
 
 if [[ "$STAGE" == "all" || "$STAGE" == "tests" ]]; then
   echo "== tier-1: pytest =="
@@ -26,6 +35,9 @@ if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then
   python -m benchmarks.run --quick --jobs 2 --only fig14,fig9 \
     --skip-roofline --profile
   test -f BENCH_sim.json && echo "BENCH_sim.json written"
+  echo "== wall-clock diff vs committed baseline (>20% regression fails) =="
+  python scripts/bench_diff.py --baseline BENCH_baseline.json \
+    --fresh BENCH_sim.json --tolerance 0.20
 fi
 
 echo "CI OK"

@@ -1,0 +1,56 @@
+"""Engine-parity smoke: both replay engines on two sentinel cells.
+
+Runs one ctx-switch-bound cell (bfs-dense/skybyte-c: short quanta, the
+classification cache's repair machinery under maximum churn) and one
+stable-state cell (srad/skybyte-w: long vector runs, compaction
+boundaries) with both engines and asserts every stat matches — integers
+exactly, floats to 1e-12 relative. Catches parity breakage in seconds,
+before the full suite or benchmark grid runs.
+
+  PYTHONPATH=src python scripts/parity_smoke.py [total_req]
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+from repro.configs.base import SimConfig
+from repro.core.simulator import simulate
+
+CELLS = (("bfs-dense", "skybyte-c"), ("srad", "skybyte-w"))
+
+# A lingering REPRO_SIM_ENGINE override (e.g. exported by a benchmarks.run
+# --engine session) would force BOTH runs onto one engine and turn this
+# gate into a self-comparison; parity must always pit the real pair.
+os.environ.pop("REPRO_SIM_ENGINE", None)
+
+
+def assert_same(a: dict, b: dict, cell: str) -> None:
+    assert set(a) == set(b), (cell, set(a) ^ set(b))
+    for k in a:
+        x, y = a[k], b[k]
+        if isinstance(x, float) or isinstance(y, float):
+            ref = max(abs(float(x)), abs(float(y)), 1e-9)
+            assert abs(float(x) - float(y)) <= 1e-12 * ref + 1e-9, \
+                f"{cell}: {k} diverged ({x} vs {y})"
+        else:
+            assert x == y, f"{cell}: {k} diverged ({x} vs {y})"
+
+
+def main(total_req: int = 60_000) -> None:
+    for workload, variant in CELLS:
+        results = {}
+        for engine in ("reference", "batched"):
+            cfg = dataclasses.replace(SimConfig(), engine=engine)
+            results[engine] = simulate(workload, variant, cfg,
+                                       total_req=total_req, seed=0)
+        assert_same(results["reference"], results["batched"],
+                    f"{workload}/{variant}")
+        print(f"# parity ok: {workload}/{variant} "
+              f"({results['batched']['n']} req, both engines bit-equal)")
+    print("ENGINE PARITY OK")
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 60_000)

@@ -307,6 +307,19 @@ class SimConfig:
     #   for configs it cannot reproduce exactly (tpp/astriflash promotion).
     # "reference": the original per-event Python loop (ground truth).
     engine: str = "batched"
+    # Cross-quantum classification cache (batched engine only; see
+    # core/engine.py). Classification work persists across scheduling
+    # quanta and is repaired through per-page epoch counters instead of
+    # being recomputed per quantum — the win on context-switch-bound
+    # cells whose quanta sit far below the NumPy break-even.
+    cls_cache: bool = True
+    # Minimum fast-run-length EWMA to run the cached vector path; below it
+    # boundary-density makes per-event inline replay cheaper than
+    # per-boundary cache repair.
+    cls_cache_min_run: float = 20.0
+    # Cap on the classified-range length (events) a thread caches ahead;
+    # the range otherwise scales with the engine's adaptive chunk.
+    cls_cache_window: int = 65536
 
     # ----- derived (scaled) quantities -----
     @property

@@ -2,58 +2,81 @@
 
 The reference engine in simulator.py retires one request per Python
 iteration (~100-250k req/s). This engine processes each scheduling quantum
-in structure-of-arrays batches instead. Two cooperating fast paths cover
-the run-length spectrum:
+in structure-of-arrays batches instead, and — new in this revision — keeps
+the expensive part of that work (per-event *classification* against the
+device state) in a **cross-quantum cache** so it is paid once per thread,
+not once per quantum.
 
-  * **Vector chunks** — a NumPy classification pass over the next chunk of
-    the thread's trace resolves runs of *state-stable* accesses in bulk
-    (host-DRAM hits, write-log hits, data-cache hits, logged writes) and
-    locates the first *state-changing boundary*: flash misses (reads and
-    Base-CSSD write misses — channel timing, fills/evictions, GC, context
-    switches), write-log fills (compaction), and page promotions. The
-    whole prefix is retired with a handful of array ops; only the boundary
-    event runs the exact per-event path (the unmodified Machine.serve).
-  * **Inline spans** — when observed fast-run lengths drop below the
-    vectorization break-even (~200 events on a typical box: each NumPy
-    call costs ~1-8 us of dispatch overhead regardless of chunk size), the
-    engine switches to a tuned per-event loop: trace columns converted to
-    native Python lists once per thread, serve()'s state-stable cases
-    inlined with *identical* operation order, and the full serve() only at
-    state-changing events. This floors the engine at ~4-8x the reference
-    loop even in boundary-dense phases (context-switch-heavy variants cap
-    quanta at ~1/miss-rate events, so per-quantum vector overhead cannot
-    amortize there).
+Why: SkyByte's coordinated context switches cap quanta at ~1/miss-rate
+events (~50-80 on ULL flash), far below the break-even of a per-quantum
+NumPy classification pass. Re-deriving the same per-page state for the
+same thread every time it is rescheduled made the ctx-switch-bound cells
+(SkyByte-C/Full) the slowest in the grid. The cache removes exactly that
+recomputation:
 
-Exactness contract (enforced by tests/test_engine.py): for the same seed
-the batched engine produces *identical* results to the reference engine —
-integer counters bit-equal, float accumulators bit-equal as well because
-bulk time/latency accumulation replays the reference's sequential
-left-to-right addition order (np.cumsum chains in the vector path, local
-Python accumulators in the inline path).
+  * **Classification cache** — each thread carries a classified *range*
+    of its upcoming trace (``SimConfig.cls_cache_window`` events at most),
+    produced by one vectorized pass into extended class codes (table
+    below). A scheduling quantum then only has to find the next boundary
+    (one argmax over the cached codes) and bulk-retire the prefix; the
+    range survives across quanta and is re-classified only when the epoch
+    check proves it stale or the thread consumes past its end.
+  * **Epoch-based page-version repair** — every membership mutation bumps
+    a per-page epoch counter on the machine (``BatchedMachine.page_epoch``):
+    cache inserts/evictions, host promotions and demotions, and log
+    compactions (which invalidate every logged line of the drained buffer
+    at once). On quantum re-entry the engine takes the max epoch of the
+    remaining range's pages (one gather) and compares it against the
+    range's stamp — clean means the codes are provably current for the
+    whole quantum (quanta are serial: no other thread can run mid-quantum)
+    and the stamp advances; dirty means the range is re-classified from
+    the current position in one vector pass. Mid-quantum, the only
+    mutators are this thread's own boundary events; the pages they bump
+    are recorded in a tiny journal and folded back in place (re-classify
+    just their range positions), after which the stamp advances again.
+    Log *appends* deliberately do not
+    bump epochs (warm write pages are appended to constantly by every
+    thread and would keep every cache dirty); line presence only grows
+    between compactions, so the prefix about to be bulk-applied is instead
+    brought current by a tiny targeted overlay (see _log_overlay).
+  * **Fused exact accumulators** — the four sequential float chains the
+    reference maintains (core time, lat_sum, lat_host, lat_hit) are
+    replayed with ONE cumsum over a 4-row buffer whose unused slots are
+    zero: IEEE addition of +0.0 is exact, so each row reproduces the
+    reference's left-to-right addition order bit-for-bit.
+  * **Inline spans** — when observed fast-run lengths drop below the cache
+    break-even (``SimConfig.cls_cache_min_run``; boundary-dense phases
+    such as Base-CSSD write storms), the engine switches to the tuned
+    per-event loop: serve()'s state-stable cases inlined with *identical*
+    operation order, full serve() only at state-changing events.
 
-How exactness is kept while batching:
+Extended class codes (int8; one per trace position):
 
-  * Dense per-page mirrors of the device state (host-DRAM membership, data
-    cache membership, a 64-bit line bitmask per page for the write log, and
-    per-page promotion counters) enable O(chunk) NumPy membership passes.
-    The mirrors are maintained by thin shadow subclasses of the ssd.py
-    structures, so the exact slow path keeps them in sync for free.
-  * Boundary detection is *predictive*: log-fill positions come from a
-    cumulative count of first-occurrence new (page, line) pairs, promotion
-    positions from per-page running access counts vs the threshold. The
-    first boundary ends the fast prefix; everything before it is provably
-    state-stable under the snapshot.
-  * Within-chunk store-to-load forwarding: a read of a (page, line) pair
-    whose write appears *earlier in the same chunk* is reclassified as a
-    write-log hit (the reference sees the appended line by then).
-  * LRU state is applied lazily but exactly: within a boundary-free prefix,
-    host/cache LRU order only interacts with itself, so replaying one
-    move-to-end per touched page in last-occurrence order yields the same
-    final recency order as the reference's per-event touches.
+  0 host-DRAM read hit      4 logged write, NEW (page,line) pair
+  1 host-DRAM write hit     5 logged write, already-present pair
+  2 write-log read hit      6 Base-CSSD cache write hit
+  3 data-cache read hit     7 boundary (miss / fill / slow path)
+
+Codes 0-6 are *state-stable*: their device-state effects are closed-form
+under a snapshot. Code 7 events run the exact per-event path
+(Machine.serve). Write-log fills and page promotions are *predicted*
+boundaries found from the cached codes (cumulative new-pair counts vs the
+log headroom; per-page running access counts vs the promotion threshold).
+Store-to-load forwarding is encoded at classification time: a read of a
+(page, line) pair whose first in-window write precedes it is classified a
+log hit, which stays correct across quanta because any other writer of
+that page bumps its epoch.
+
+Exactness contract (enforced by tests/test_engine.py and
+tests/test_engine_cache.py): for the same seed the batched engine — with
+the cache on or off, under any churn — produces *identical* results to the
+reference engine; integer counters bit-equal, float accumulators bit-equal
+as well because bulk accumulation replays the reference's sequential
+addition order.
 
 Stochastic promotion policies ("tpp" consumes RNG per access,
 "astriflash" promotes on every cache-resident touch) leave no usable
-state-stable vector fast path; they are pinned to the inline span, whose
+state-stable fast path; they are pinned to the inline span, whose
 per-event order keeps even the RNG stream exact.
 """
 from __future__ import annotations
@@ -66,12 +89,44 @@ from repro.configs.base import SimConfig
 from repro.core.simulator import Machine, Thread, _record, _replay_prologue
 from repro.core.ssd import DataCache, WriteLog
 
-# Vectorization break-even: below this expected fast-run length the inline
-# per-event span loop beats per-chunk NumPy dispatch overhead.
+# Vectorization break-even WITHOUT the classification cache: below this
+# expected fast-run length the inline per-event span loop beats per-chunk
+# NumPy classify + dispatch overhead. (With the cache the break-even is
+# SimConfig.cls_cache_min_run, far lower: classification is pre-paid.)
 _VEC_MIN = 192
 _CHUNK_MAX = 8192
+_CHUNK_FLOOR = 64
 # Events to replay inline before re-probing vectorization.
 _SPAN = 1024
+
+# Cross-quantum classification-cache observability (per process; reset by
+# simulate() at the start of every batched run). benchmarks/run.py folds
+# these into BENCH_sim.json's engine calibration section.
+CACHE_STATS = {
+    "builds": 0,      # range classifications due to range exhaustion/first use
+    "checks": 0,      # quantum re-entry epoch validations of a live range
+    "clean": 0,       # validations whose range pages were all unchanged (hits)
+    "repairs": 0,     # dirty validations -> range re-classified in place
+    "folds": 0,       # boundary-event page sets folded back mid-quantum
+    "classified": 0,  # total events classified (amortization denominator)
+}
+
+
+def reset_cache_stats() -> None:
+    for k in CACHE_STATS:
+        CACHE_STATS[k] = 0
+
+
+def cache_hit_rate() -> float:
+    """Fraction of re-entry validations that consumed cached codes as-is."""
+    v = CACHE_STATS["checks"]
+    return CACHE_STATS["clean"] / v if v else 0.0
+
+
+def cache_repair_rate() -> float:
+    """Fraction of re-entry validations that re-classified the range."""
+    v = CACHE_STATS["checks"]
+    return CACHE_STATS["repairs"] / v if v else 0.0
 
 
 def supported(cfg: SimConfig) -> bool:
@@ -103,54 +158,73 @@ class _ArrayCounts:
 
 
 class _ShadowHost(OrderedDict):
-    """Host-DRAM LRU with a dense membership mirror. Scalar mirror writes
-    go through a memoryview (~4x cheaper than NumPy scalar indexing); the
-    ndarray view is what the vector path fancy-indexes."""
+    """Host-DRAM LRU with a dense membership mirror and epoch bumps on
+    membership changes. Scalar mirror writes go through a memoryview
+    (~4x cheaper than NumPy scalar indexing); the ndarray view is what
+    the vector path fancy-indexes."""
 
-    def __init__(self, page_space: int):
+    def __init__(self, machine: "BatchedMachine", page_space: int):
         super().__init__()
         self.arr = np.zeros(page_space, bool)
         self._mv = memoryview(self.arr)
+        self._m = machine
 
     def __setitem__(self, page, value) -> None:
         super().__setitem__(page, value)
         self._mv[page] = True
+        self._m._bump(page)
 
     def popitem(self, last: bool = True):
         page, value = super().popitem(last)
         self._mv[page] = False
+        self._m._bump(page)
         return page, value
 
 
 class _ShadowCache(DataCache):
     """DataCache with a dense membership mirror (memoryview for scalar
-    writes, ndarray for the vector path's bulk reads)."""
+    writes, ndarray for the vector path's bulk reads) and epoch bumps on
+    inserts/evictions/removals."""
 
-    def __init__(self, cfg: SimConfig, page_space: int):
+    def __init__(self, machine: "BatchedMachine", cfg: SimConfig, page_space: int):
         super().__init__(cfg)
         self.arr = np.zeros(page_space, bool)
         self._mv = memoryview(self.arr)
+        self._m = machine
 
     def insert(self, page, dirty):
         ev = super().insert(page, dirty)
         self._mv[page] = True
+        self._m._bump(page)
         if ev is not None:
             self._mv[ev[0]] = False
+            self._m._bump(ev[0])
         return ev
 
     def remove(self, page) -> None:
         super().remove(page)
         self._mv[page] = False
+        self._m._bump(page)
 
 
 class _ShadowLog(WriteLog):
     """WriteLog with a per-page 64-bit line-presence bitmask mirror of the
     active buffer (the old buffer is only non-empty inside _compact, which
-    never overlaps the fast path)."""
+    never overlaps the fast path).
 
-    def __init__(self, cfg: SimConfig, page_space: int):
+    Appends do NOT bump epochs: line presence only ever *grows* between
+    compactions, so cached codes are brought current by the cheap per-chunk
+    log overlay in batched_quantum (reads of now-present lines -> log hits,
+    new-pair writes -> duplicates) instead of by page repair — warm write
+    pages are appended to constantly by every thread, and bumping them
+    would keep every cache permanently dirty. A compaction breaks the
+    monotonicity (lines vanish all at once), so it bumps every page the
+    drained buffer held."""
+
+    def __init__(self, machine: "BatchedMachine", cfg: SimConfig, page_space: int):
         super().__init__(cfg)
         self.bits = np.zeros(page_space, np.uint64)
+        self._m = machine
 
     def append(self, page, line):
         self.bits[page] |= np.uint64(1 << line)
@@ -158,30 +232,70 @@ class _ShadowLog(WriteLog):
 
     def bulk_append_new(self, pages: np.ndarray, lines: np.ndarray) -> None:
         # bitwise_or.at: pages may repeat within a batch (several new lines
-        # of one page); plain fancy-index |= would drop all but one OR
+        # of one page); plain fancy-index |= would drop all but one OR.
+        # Setting bits for pairs the dup-tolerant base append then skips is
+        # harmless — they are already present by definition.
         np.bitwise_or.at(self.bits, pages, np.uint64(1) << lines.astype(np.uint64))
         super().bulk_append_new(pages, lines)
 
     def swap_for_compaction(self):
         self.bits[:] = 0
+        old_pages = list(self.active)
+        if old_pages:
+            self._m._bump_list(old_pages)
         return super().swap_for_compaction()
 
 
+class _ClsCache:
+    """Per-thread cross-quantum classification cache.
+
+    ``codes[lo:hi]`` holds the extended class code of every trace position
+    in the cached range, classified against the device state at epoch
+    ``stamp``. A chunk whose pages' epochs are all <= stamp consumes the
+    codes as-is; anything else re-classifies the range from the current
+    position (one vector pass — cheaper than surgically patching pages,
+    whose stale sets only grow)."""
+
+    __slots__ = ("codes", "lo", "hi", "stamp")
+
+    def __init__(self, n: int):
+        self.codes = np.empty(n, np.int8)
+        self.lo = 0
+        self.hi = 0
+        self.stamp = -1
+
+
 class BatchedMachine(Machine):
-    """Machine whose device structures carry dense NumPy mirrors so whole
-    chunks of the trace can be classified without per-event Python."""
+    """Machine whose device structures carry dense NumPy mirrors plus
+    per-page epoch counters, so whole chunks of the trace can be
+    classified without per-event Python — and stay classified across
+    scheduling quanta."""
 
     def __init__(self, cfg: SimConfig, seed: int, page_space: int):
         super().__init__(cfg, seed)
         self.page_space = page_space
-        self.cache = _ShadowCache(cfg, page_space)
+        # --- epoch board: every membership mutation (host / cache /
+        # compaction) bumps the touched page's epoch; classification
+        # caches compare range page epochs against their stamp. The
+        # journal names the pages bumped by the boundary event in flight
+        # so they can be folded back into the live cache immediately ---
+        self.page_epoch = np.zeros(page_space, np.int64)
+        self._epoch_mv = memoryview(self.page_epoch)
+        self.epoch_clock = 0
+        self.journal: list = []
+        self.cache = _ShadowCache(self, cfg, page_space)
         if cfg.enable_write_log:
-            self.log = _ShadowLog(cfg, page_space)
-        self.host = _ShadowHost(page_space)
+            self.log = _ShadowLog(self, cfg, page_space)
+        self.host = _ShadowHost(self, page_space)
         self.acc_count = _ArrayCounts(page_space)
         # stochastic promotion consumes RNG per access: only the strictly
         # per-event inline span preserves the draw order
         self._inline_only = cfg.enable_promotion and cfg.promo_policy != "skybyte"
+        self._use_cache = (cfg.cls_cache and not self._inline_only
+                           and not cfg.dram_only)
+        self._min_run = cfg.cls_cache_min_run if self._use_cache else _VEC_MIN
+        self._window = max(int(cfg.cls_cache_window), 1)
+        self._caches: dict = {}  # tid -> _ClsCache
         self.chunk = 512  # adaptive: grows on clean chunks, shrinks at boundaries
         # EWMA of fast-run length (events between state-changing boundaries);
         # decides vector chunks vs the inline span loop. Start optimistic so
@@ -193,10 +307,24 @@ class BatchedMachine(Machine):
         lat_host = cfg.host_dram_ns
         lat_log = base + cfg.log_index_ns + cfg.ssd_dram_ns
         lat_cache = base + cfg.cache_index_ns + cfg.ssd_dram_ns
-        # class codes: 0 host hit, 1 log hit (read), 2 cache hit (read),
-        # 3 logged write, 4 Base-CSSD write hit; -1 = boundary (slow path)
-        self._lat_lut = np.array([lat_host, lat_log, lat_cache, lat_log, lat_cache])
+        # per extended class code (0-7; boundary gets 0, never used)
+        self._lat_lut8 = np.array([lat_host, lat_host, lat_log, lat_cache,
+                                   lat_log, lat_log, lat_cache, 0.0])
+        self._lat_log = lat_log
         self._counting = cfg.enable_promotion and cfg.promo_policy == "skybyte"
+
+    # ---- epoch bumps (called by the shadow structures) ----
+    def _bump(self, page: int) -> None:
+        c = self.epoch_clock + 1
+        self.epoch_clock = c
+        self._epoch_mv[page] = c
+        self.journal.append(page)
+
+    def _bump_list(self, pages: list) -> None:
+        c = self.epoch_clock + len(pages)
+        self.epoch_clock = c
+        self.page_epoch[pages] = c
+        self.journal.extend(pages)
 
     def _columns(self, th: Thread):
         cols = self._cols.get(th.tid)
@@ -205,15 +333,6 @@ class BatchedMachine(Machine):
                     th.gap64.tolist())
             self._cols[th.tid] = cols
         return cols
-
-
-def _chain_sum(init: float, vals: np.ndarray) -> float:
-    """Sequential left-to-right float accumulation: init + v0 + v1 + ...
-    in the exact association order the reference's `acc += v` loop uses."""
-    buf = np.empty(vals.size + 1)
-    buf[0] = init
-    buf[1:] = vals
-    return np.cumsum(buf)[-1]
 
 
 def _last_occurrence_order(pages: np.ndarray):
@@ -226,85 +345,123 @@ def _last_occurrence_order(pages: np.ndarray):
     return reversed(d)
 
 
-def _classify(m: BatchedMachine, cfg: SimConfig, pg, ln, wr):
-    """Class codes for a chunk against the current state snapshot, plus the
-    line-presence mask (for the log bulk append)."""
-    k = len(pg)
+def _classify_positions(m: BatchedMachine, cfg: SimConfig, pg, ln, wr):
+    """Extended class codes for a batch of trace events against the current
+    state snapshot.
+
+    The batch may be a contiguous trace slice OR any gather of positions,
+    as long as same-page events appear in ascending trace order: the
+    newness / store-to-load-forwarding logic groups by (page, line) pair,
+    and pairs never span pages, so per-page ascending order is the only
+    ordering it observes."""
     if cfg.dram_only:
-        return np.zeros(k, np.int8), None
+        return wr.astype(np.int8)
+    k = pg.shape[0]
     hostm = m.host.arr[pg]
     cachem = m.cache.arr[pg]
-    if m.log is not None:
-        linem = (m.log.bits[pg] >> ln.astype(np.uint64)) & np.uint64(1) != 0
-        cls_r = np.where(linem, np.int8(1), np.where(cachem, np.int8(2), np.int8(-1)))
-        cls = np.where(hostm, np.int8(0), np.where(wr, np.int8(3), cls_r)).astype(np.int8)
-        _forward_log_reads(pg, ln, wr, cls)
-    else:
-        linem = None
-        cls_r = np.where(cachem, np.int8(2), np.int8(-1))
-        cls_w = np.where(cachem, np.int8(4), np.int8(-1))
-        cls = np.where(hostm, np.int8(0), np.where(wr, cls_w, cls_r)).astype(np.int8)
-    return cls, linem
+    if m.log is None:
+        return np.where(
+            hostm, wr.astype(np.int8),
+            np.where(cachem,
+                     np.where(wr, np.int8(6), np.int8(3)),
+                     np.int8(7)),
+        ).astype(np.int8)
+    linem = (m.log.bits[pg] >> ln.astype(np.uint64)) & np.uint64(1) != 0
+    new = np.zeros(k, bool)
+    logged = linem
+    wmask = wr & ~hostm
+    widx = np.flatnonzero(wmask)
+    if widx.size:
+        pairs = pg * 64 + ln
+        wp = pairs[widx]
+        order = np.argsort(wp, kind="stable")
+        sw = wp[order]
+        first = np.empty(sw.size, bool)
+        first[0] = True
+        np.not_equal(sw[1:], sw[:-1], out=first[1:])
+        fidx = widx[order[first]]  # earliest in-batch write per pair
+        new[fidx] = ~linem[fidx]
+        # forwarding: any event on the pair AFTER its first write sees the
+        # appended line (the reference's log.lookup would by then)
+        upairs = sw[first]
+        loc = np.searchsorted(upairs, pairs)
+        loc[loc == upairs.size] = 0  # clamp; mismatch check below rejects
+        logged = linem | ((upairs[loc] == pairs) & (fidx[loc] < np.arange(k)))
+    wcodes = np.where(new, np.int8(4), np.int8(5))
+    rcodes = np.where(logged, np.int8(2),
+                      np.where(cachem, np.int8(3), np.int8(7)))
+    return np.where(hostm, wr.astype(np.int8),
+                    np.where(wr, wcodes, rcodes)).astype(np.int8)
 
 
-def _forward_log_reads(pg, ln, wr, cls) -> None:
-    """Store-to-load forwarding within a chunk: a read of a (page, line)
-    pair first *written* at an earlier chunk position sees the appended
-    line in the write log — reclassify it from cache-hit/miss to log hit,
-    exactly as the reference's log.lookup would."""
-    widx = np.flatnonzero(cls == 3)
-    if not widx.size:
-        return
-    ridx = np.flatnonzero((cls == 2) | (cls == -1) & ~wr)
-    if not ridx.size:
-        return
-    wpairs = pg[widx] * 64 + ln[widx]
-    order = np.argsort(wpairs, kind="stable")
-    sw = wpairs[order]
-    keep = np.empty(sw.size, bool)
-    keep[0] = True
-    np.not_equal(sw[1:], sw[:-1], out=keep[1:])
-    upairs = sw[keep]
-    upos = widx[order][keep]  # earliest write position per pair
-    rpairs = pg[ridx] * 64 + ln[ridx]
-    loc = np.searchsorted(upairs, rpairs)
-    loc[loc == upairs.size] = 0  # clamp; mismatch check below rejects
-    fwd = (upairs[loc] == rpairs) & (upos[loc] < ridx)
-    cls[ridx[fwd]] = 1
+def _refresh_cache(m: BatchedMachine, cfg: SimConfig, th: Thread,
+                   cc: _ClsCache, i: int, want: int) -> None:
+    """(Re)classify the thread's cached range starting at position i,
+    covering at least ``want`` events. The range scales with the adaptive
+    chunk (boundary-dense phases keep refreshes cheap, stable phases
+    amortize over tens of thousands of events), capped by the
+    ``SimConfig.cls_cache_window`` knob."""
+    r = min(th.n, i + max(min(4 * m.chunk, m._window), want))
+    cc.codes[i:r] = _classify_positions(m, cfg, th.page[i:r], th.line[i:r],
+                                        th.write[i:r])
+    cc.lo = i
+    cc.hi = r
+    cc.stamp = m.epoch_clock
+    CACHE_STATS["classified"] += r - i
 
 
-def _first_boundary(m: BatchedMachine, cfg: SimConfig, pg, ln, cls, linem) -> int:
-    """Index of the first state-changing event in the chunk (len(pg) if
-    none): hard boundaries (cls == -1), predicted write-log fills, and
+def _log_overlay(m: BatchedMachine, th: Thread, i: int, b: int,
+                 pg, ln, codes) -> None:
+    """Fold write-log lines appended since classification into the prefix
+    about to be applied. Line presence only grows between compactions
+    (which bump epochs and take the repair path), so the only stale code
+    that could corrupt bulk application is a cache-read-hit whose line is
+    now logged (3 -> 2: the reference checks the log before the cache).
+    Stale NEW-pair writes are absorbed by the dup-tolerant bulk append,
+    and a read-miss that became a log hit (7) stays a boundary that
+    serve() resolves exactly."""
+    fc = codes[:b]
+    aff = np.flatnonzero(fc == 3)
+    if aff.size:
+        linem = (m.log.bits[pg[aff]] >> ln[aff].astype(np.uint64)) \
+            & np.uint64(1) != 0
+        if linem.any():
+            fc[aff[linem]] = 2
+
+
+def _next_boundary(m: BatchedMachine, cfg: SimConfig, pg, fc) -> int:
+    """Index of the first state-changing event in the code slice (len(fc)
+    if none): hard boundaries (code 7), predicted write-log fills, and
     predicted page promotions."""
-    b = len(pg)
-    hard = cls == -1
-    if hard.any():
-        b = int(hard.argmax())
-    if m.log is not None and b > 0:
-        wmask = cls[:b] == 3
-        widx = np.flatnonzero(wmask)
-        # each write adds at most one entry: only worth the exact count
-        # when the active buffer could conceivably fill inside the prefix
-        if widx.size and m.log.active_n + widx.size >= m.log.cap:
-            pairs = pg[widx] * 64 + ln[widx]
-            _, first = np.unique(pairs, return_index=True)
-            isnew = np.zeros(widx.size, bool)
-            fresh = first[~linem[widx][first]]  # pair not in the active log yet
-            isnew[fresh] = True
-            level = m.log.active_n + np.cumsum(isnew)
-            fill = level >= m.log.cap
-            if fill.any():
-                b = min(b, int(widx[fill.argmax()]))
-    if m._counting and b > 0:
-        counted = cls[:b] > 0  # every non-host fast event reaches _maybe_promote
+    b = fc.shape[0]
+    am = int(fc.argmax())
+    if fc[am] == 7:
+        b = am
+        if b == 0:
+            return 0
+        fc = fc[:b]
+    log = m.log
+    if log is not None:
+        # each NEW-pair write (code 4) adds one entry; only worth the exact
+        # scan when the active buffer could conceivably fill in this chunk
+        headroom = log.cap - log.active_n
+        if headroom <= b:
+            lvl = np.cumsum(fc == np.int8(4))
+            if int(lvl[-1]) >= headroom:
+                b = min(b, int(np.searchsorted(lvl, headroom)))
+                if b == 0:
+                    return 0
+                fc = fc[:b]
+    if m._counting:
+        counted = fc >= 2  # every non-host fast event reaches _maybe_promote
         cidx = np.flatnonzero(counted)
         if cidx.size:
             cp = pg[cidx]
+            acc_cp = m.acc_count.arr[cp]
             # promotion needs a cache-resident page whose counter crosses
             # the threshold; cheap prescreen before the exact ranking
             resident = m.cache.arr[cp]
-            maybe = resident & (m.acc_count.arr[cp] + cidx.size >= cfg.promote_threshold)
+            maybe = resident & (acc_cp + cidx.size >= cfg.promote_threshold)
             if maybe.any():
                 order = np.argsort(cp, kind="stable")
                 sp = cp[order]
@@ -316,85 +473,73 @@ def _first_boundary(m: BatchedMachine, cfg: SimConfig, pg, ln, cls, linem) -> in
                 np.maximum.accumulate(grp_start, out=grp_start)
                 occ = np.empty(sp.size, np.int64)
                 occ[order] = idx - grp_start
-                projected = m.acc_count.arr[cp] + occ + 1
-                cand = (projected >= cfg.promote_threshold) & resident
+                cand = (acc_cp + occ + 1 >= cfg.promote_threshold) & resident
                 if cand.any():
                     b = min(b, int(cidx[cand.argmax()]))
     return b
 
 
-def _apply_fast_prefix(m: BatchedMachine, cfg: SimConfig, th: Thread,
-                       i: int, b: int, t: float, pg, ln, wr, cls) -> float:
+def _apply_prefix(m: BatchedMachine, cfg: SimConfig, th: Thread,
+                  i: int, b: int, t: float, pg, ln, codes) -> float:
     """Retire events [i, i+b) of the thread's trace in bulk. All are
-    state-stable under the snapshot; cls is a chunk-local view."""
+    state-stable under the snapshot; pg/ln/codes are chunk-local views."""
     st = m.stats
-    fc = cls[:b]
-    fpg = pg[:b]
-    lats = m._lat_lut[fc]
-    # time: replay the reference's `t += gap; t += lat` sequence exactly
-    buf = np.empty(2 * b + 1)
-    buf[0] = t
-    buf[1::2] = th.gap64[i:i + b]
-    buf[2::2] = lats
-    t = np.cumsum(buf)[-1]
+    fc = codes[:b]
+    cnt = np.bincount(fc, minlength=8).tolist()
+    n_hr, n_hw, n_log, n_cr, n_w4, n_w5, n_cw = cnt[:7]
+    lats = m._lat_lut8[fc]
+    # ONE cumsum replays all four sequential float chains of the reference
+    # (`t += gap; t += lat` interleaved; `lat_sum += lat`; `lat_host += lat`
+    # on host events; `lat_hit += lat` on the rest). Unused slots hold +0.0,
+    # and IEEE x + 0.0 == x exactly, so each row reproduces the reference's
+    # left-to-right addition order bit-for-bit.
+    buf = np.zeros((4, 2 * b + 1))
+    buf[:, 0] = (t, st.lat_sum, st.lat_host, st.lat_hit)
+    buf[0, 1::2] = th.gap64[i:i + b]
+    buf[:2, 2::2] = lats
+    nh = n_hr + n_hw
+    hostm = None
+    if nh == b:
+        buf[2, 2::2] = lats
+    elif nh:
+        hostm = fc < 2
+        buf[2, 2::2] = lats * hostm
+        buf[3, 2::2] = lats * ~hostm
+    else:
+        buf[3, 2::2] = lats
+    t, st.lat_sum, st.lat_host, st.lat_hit = buf.cumsum(axis=1)[:, -1].tolist()
     # counters
-    hostc = fc == 0
     st.n += b
-    n_host = int(np.count_nonzero(hostc))
-    if n_host:
-        n_hw = int(np.count_nonzero(hostc & wr[:b]))
-        st.host_r += n_host - n_hw
-        st.host_w += n_hw
-    st.hit_log += int(np.count_nonzero(fc == 1))
-    st.hit_cache += int(np.count_nonzero(fc == 2))
-    st.ssd_w += int(np.count_nonzero(fc >= 3))
-    st.lat_sum = _chain_sum(st.lat_sum, lats)
-    if n_host:
-        st.lat_host = _chain_sum(st.lat_host, lats[hostc])
-    hitm = fc > 0
-    if hitm.any():
-        st.lat_hit = _chain_sum(st.lat_hit, lats[hitm])
+    st.host_r += n_hr
+    st.host_w += n_hw
+    st.hit_log += n_log
+    st.hit_cache += n_cr
+    st.ssd_w += n_w4 + n_w5 + n_cw
     if cfg.dram_only:
         return t
     # lazy-but-exact state application
-    if n_host:
+    fpg = pg[:b]
+    if nh:
         move = m.host.move_to_end
-        for p in _last_occurrence_order(fpg[hostc]):
+        hpg = fpg if nh == b else fpg[hostm]
+        for p in _last_occurrence_order(hpg):
             move(p)
-    touch = (fc == 2) | (fc == 4)
-    if touch.any():  # cache LRU (read hits + Base-CSSD write hits)
+    if n_cr or n_cw:  # cache LRU (read hits + Base-CSSD write hits)
+        touch = fc == 3 if not n_cw else (fc == 3) | (fc == 6)
         m.cache.touch_many(_last_occurrence_order(fpg[touch]))
-    dirty = fc == 4
-    if dirty.any():
+    if n_cw:
         mark = m.cache.mark_dirty
-        for p in set(fpg[dirty].tolist()):
+        for p in set(fpg[fc == 6].tolist()):
             mark(p)
-    logw = fc == 3
-    if logw.any():
-        lpg, lln = fpg[logw], ln[:b][logw]
-        bits = m.log.bits
-        seen = set()
-        np_new, nl_new = [], []
-        for p, l in zip(lpg.tolist(), lln.tolist()):
-            pr = p * 64 + l
-            if pr in seen:
-                continue
-            seen.add(pr)
-            if not int(bits[p]) >> l & 1:
-                np_new.append(p)
-                nl_new.append(l)
-        if np_new:
-            m.log.bulk_append_new(np.asarray(np_new, np.int64),
-                                  np.asarray(nl_new, np.int64))
-    if m._counting:
-        counted = fc > 0
-        if counted.any():
-            # per-page totals via a dict (faster than np.add.at dispatch at
-            # typical chunk sizes); keys are unique, fancy += is safe
-            totals = {}
-            for p in fpg[counted].tolist():
-                totals[p] = totals.get(p, 0) + 1
-            m.acc_count.arr[list(totals)] += list(totals.values())
+    if n_w4:
+        wm = fc == 4
+        m.log.bulk_append_new(fpg[wm], ln[:b][wm])
+    if m._counting and nh != b:
+        cpg = fpg if nh == 0 else fpg[~hostm]
+        if cpg.size > 1024:  # bincount amortizes its page_space allocation
+            m.acc_count.arr += np.bincount(cpg, minlength=m.page_space)
+        else:
+            np.add.at(m.acc_count.arr, cpg, 1)
     return t
 
 
@@ -481,6 +626,8 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                     if e is None:
                         e = log_active[p] = {}
                     e[l] = True
+                    # no epoch bump: cached codes absorb new lines through
+                    # the per-chunk log overlay, not page repair
                     logbits[p] = logbits[p] | (1 << l)
                     an += 1
                     if an >= log_cap:  # filled: drain the old buffer
@@ -635,6 +782,76 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
     return i + k, t, blocked
 
 
+def _classify_few(m: BatchedMachine, th: Thread, cc: _ClsCache,
+                  pos) -> None:
+    """Scalar-path re-classification of a few ascending trace positions
+    (same semantics as _classify_positions, via the dense mirrors)."""
+    pages, lines, writes, _ = m._columns(th)
+    hostv = m.host._mv
+    cachev = m.cache._mv
+    log = m.log
+    bits = memoryview(log.bits) if log is not None else None
+    codes_mv = memoryview(cc.codes)
+    seen = set()
+    for x in pos.tolist():
+        p = pages[x]
+        w = writes[x]
+        if hostv[p]:
+            codes_mv[x] = 1 if w else 0
+            continue
+        if bits is None:
+            codes_mv[x] = (6 if w else 3) if cachev[p] else 7
+            continue
+        l = lines[x]
+        pr = p * 64 + l
+        present = (bits[p] >> l) & 1 or pr in seen
+        if w:
+            if present:
+                codes_mv[x] = 5
+            else:
+                codes_mv[x] = 4
+                seen.add(pr)
+        elif present:
+            codes_mv[x] = 2
+        else:
+            codes_mv[x] = 3 if cachev[p] else 7
+
+
+def _fold_boundary(m: BatchedMachine, cfg: SimConfig, th: Thread,
+                   cc: _ClsCache, i: int) -> None:
+    """Fold the pages mutated by the boundary event just executed (machine
+    journal) back into the live cached range, then advance the stamp.
+
+    Advancing the stamp here is sound because quanta are serial: between
+    the quantum-entry validation and now, the ONLY state mutations are this
+    thread's own boundary events, and their pages are exactly the journal.
+    Folding in place keeps the common ctx-switch cycle — miss on page p,
+    insert p, evict q, park — from failing the next validation: p is
+    usually re-accessed immediately (spatial runs)."""
+    jl = m.journal
+    if jl:
+        if len(jl) <= 24:
+            CACHE_STATS["folds"] += 1
+            pgr = th.page[i:cc.hi]
+            mask = pgr == jl[0]
+            for p in jl[1:]:
+                mask |= pgr == p
+            pos = np.flatnonzero(mask)
+            if pos.size:
+                pos += i
+                if pos.size <= 24:
+                    # scalar re-classification: a handful of positions is
+                    # not worth ~20 NumPy dispatches
+                    _classify_few(m, th, cc, pos)
+                else:
+                    cc.codes[pos] = _classify_positions(
+                        m, cfg, th.page[pos], th.line[pos], th.write[pos])
+        else:  # flood (compaction drained the log): reclassify wholesale
+            _refresh_cache(m, cfg, th, cc, i, m.chunk)
+        jl.clear()
+    cc.stamp = m.epoch_clock
+
+
 def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                     wslots) -> float:
     """Run one scheduling quantum with the batched engine. Semantically
@@ -642,41 +859,136 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
     i, n = th.i, th.n
     if th.replay:
         i, t = _replay_prologue(m, cfg, th, t)
+    m.journal.clear()  # only this quantum's boundary bumps matter
     blocked = False
+    cc = None
+    min_run = m._min_run
+    use_cache = m._use_cache
     while i < n and not blocked:
-        if (m.runlen < _VEC_MIN or m._inline_only) and not cfg.dram_only:
-            # boundary-dense stretch: inline replay beats per-chunk NumPy
-            # dispatch (each array op costs fixed ~1-8us regardless of size);
-            # the span reports observed run lengths back into the EWMA so
-            # the engine re-vectorizes when runs lengthen again
+        if m.runlen < min_run or m._inline_only:
+            # boundary-dense stretch: per-event inline replay beats even a
+            # pre-classified vector pass (repairing the cache at every
+            # boundary would dominate); the span reports observed run
+            # lengths back into the EWMA so the engine re-vectorizes when
+            # runs lengthen again
+            cc = None
             i, t, blocked = _inline_span(m, cfg, th, t, wslots, i,
                                          min(i + _SPAN, n))
             continue
         j = min(i + m.chunk, n)
-        pg = th.page[i:j]
-        ln = th.line[i:j]
-        wr = th.write[i:j]
-        cls, linem = _classify(m, cfg, pg, ln, wr)
-        b = _first_boundary(m, cfg, pg, ln, cls, linem)
+        if use_cache:
+            if cc is None:
+                cc = m._caches.get(th.tid)
+                if cc is None:
+                    cc = _ClsCache(n)
+                    m._caches[th.tid] = cc
+                if i < cc.lo or i >= cc.hi:
+                    CACHE_STATS["builds"] += 1
+                    _refresh_cache(m, cfg, th, cc, i, j - i)
+                else:
+                    # re-entry validation: one epoch gather over the
+                    # remaining range decides whether any of its pages
+                    # changed membership since the stamp — usually not,
+                    # so the whole quantum consumes cached codes as-is
+                    CACHE_STATS["checks"] += 1
+                    if int(m.page_epoch[th.page[i:cc.hi]].max()) > cc.stamp:
+                        CACHE_STATS["repairs"] += 1
+                        _refresh_cache(m, cfg, th, cc, i, j - i)
+                    else:
+                        CACHE_STATS["clean"] += 1
+                cc.stamp = m.epoch_clock
+                m.journal.clear()
+            if j > cc.hi:  # chunk overruns the (validated) range
+                CACHE_STATS["builds"] += 1
+                _refresh_cache(m, cfg, th, cc, i, j - i)
+            codes = cc.codes[i:j]
+            pg = th.page[i:j]
+            ln = th.line[i:j]
+        else:
+            pg = th.page[i:j]
+            ln = th.line[i:j]
+            codes = _classify_positions(m, cfg, pg, ln, th.write[i:j])
+        b = _next_boundary(m, cfg, pg, codes)
         if b > 0:
-            t = _apply_fast_prefix(m, cfg, th, i, b, t, pg, ln, wr, cls)
+            if use_cache and m.log is not None:
+                _log_overlay(m, th, i, b, pg, ln, codes)
+            t = _apply_prefix(m, cfg, th, i, b, t, pg, ln, codes)
             i += b
-        if b < len(pg):  # boundary inside the chunk
+        if b < pg.shape[0]:  # boundary inside the chunk
             m.runlen += 0.25 * (b - m.runlen)
             # exact slow path for the state-changing event
             t = t + th.gap64[i]
-            lat, blocked_until, scls = m.serve(int(pg[b]), int(ln[b]),
-                                               bool(wr[b]), t, wslots)
-            if blocked_until is not None:
-                th.ready = blocked_until
-                th.replay = True
-                t += cfg.ctx_switch_ns
-                blocked = True
-            else:
+            pgb = int(pg[b])
+            wrb = bool(th.write[i])
+            if cc is not None and not wrb and cfg.enable_ctx_switch \
+                    and codes[b] == 7:
+                # transcribed coordinated-ctx read-miss path (the hottest
+                # boundary by far): the epoch validation proves pgb is
+                # neither host- nor cache-resident, so only the
+                # (append-monotone) write log needs a live probe — the
+                # operation order below is serve()'s, to the letter
+                log = m.log
+                e = log.active.get(pgb) if log is not None else None
+                if e is not None and int(ln[b]) in e:
+                    # line arrived since classification: an exact log hit
+                    m._maybe_promote(pgb, t)
+                    lat = m._lat_log
+                    t += lat
+                    _record(m.stats, "hit_log", lat)
+                    i += 1
+                else:
+                    est = m.channels.estimate(pgb, t)
+                    done = m.channels.read(pgb, t)
+                    ev = m.cache.insert(pgb, False)
+                    m._handle_evict(ev, t)
+                    if est > cfg.ctx_threshold_ns:
+                        m.stats.ctx_switches += 1
+                        m._maybe_promote(pgb, t)
+                        th.ready = done
+                        th.replay = True
+                        t += cfg.ctx_switch_ns
+                        blocked = True
+                    else:
+                        m._maybe_promote(pgb, t)
+                        # same left-to-right addition order as serve()
+                        lat = (done - t) + cfg.cxl_protocol_ns \
+                            + cfg.cache_index_ns + cfg.ssd_dram_ns
+                        t += lat
+                        _record(m.stats, "miss_flash", lat)
+                        i += 1
+            elif cc is not None and wrb and m.log is None and codes[b] == 7:
+                # transcribed Base-CSSD write miss (posted store, background
+                # page fetch in a write slot) — serve()'s order to the letter
+                stall = 0.0
+                if len(wslots) >= cfg.max_outstanding:
+                    oldest = min(wslots)
+                    wslots.remove(oldest)
+                    if oldest > t:
+                        stall = oldest - t
+                wslots.append(m.channels.read(pgb, t + stall))
+                ev = m.cache.insert(pgb, True)
+                m._handle_evict(ev, t)
+                m._maybe_promote(pgb, t)
+                lat = stall + cfg.cxl_protocol_ns + cfg.cache_index_ns \
+                    + cfg.ssd_dram_ns
                 t += lat
-                _record(m.stats, scls, lat)
+                _record(m.stats, "ssd_w", lat)
                 i += 1
-            m.chunk = max(_VEC_MIN, min(_CHUNK_MAX, 2 * b + 32))
+            else:
+                lat, blocked_until, scls = m.serve(pgb, int(ln[b]), wrb,
+                                                   t, wslots)
+                if blocked_until is not None:
+                    th.ready = blocked_until
+                    th.replay = True
+                    t += cfg.ctx_switch_ns
+                    blocked = True
+                else:
+                    t += lat
+                    _record(m.stats, scls, lat)
+                    i += 1
+            if cc is not None:
+                _fold_boundary(m, cfg, th, cc, i)
+            m.chunk = max(_CHUNK_FLOOR, min(_CHUNK_MAX, 2 * b + 32))
         else:
             m.chunk = min(_CHUNK_MAX, m.chunk * 2)
     th.i = i

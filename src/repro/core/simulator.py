@@ -38,6 +38,7 @@ import dataclasses
 import os
 import random
 from collections import OrderedDict
+from operator import attrgetter
 from typing import Any, Dict, List, Tuple
 
 import numpy as np
@@ -246,6 +247,10 @@ class Machine:
 
 
 _CLS_LAT = ("host_r", "host_w", "hit_log", "hit_cache", "miss_flash", "ssd_w")
+# C-level min() keys for the scheduler (same first-minimum tie-break as the
+# equivalent lambdas, ~3x cheaper per candidate scan)
+_BY_VRUNTIME = attrgetter("vruntime")
+_BY_LAST_SCHED = attrgetter("last_sched")
 
 
 def _record(st: Stats, cls: str, lat: float) -> None:
@@ -359,6 +364,7 @@ def simulate(
         use_batched = _engine.supported(cfg)
     if use_batched:
         page_space = int(max(tr["n_pages"] for tr in traces))
+        _engine.reset_cache_stats()
         m = _engine.BatchedMachine(cfg, seed, page_space)
         runner = _engine.batched_quantum
     else:
@@ -390,11 +396,11 @@ def simulate(
             cores[c] = max(t_now, min(waits))
             continue
         if policy == "CFS":
-            th = min(cand, key=lambda x: x.vruntime)
+            th = min(cand, key=_BY_VRUNTIME)
         elif policy == "RANDOM":
             th = m.rng.choice(cand)
         else:  # RR
-            th = min(cand, key=lambda x: x.last_sched)
+            th = min(cand, key=_BY_LAST_SCHED)
         sched_counter += 1
         th.last_sched = sched_counter
         th.running = True

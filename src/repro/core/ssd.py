@@ -150,17 +150,24 @@ class WriteLog:
         return self.active_n >= self.cap
 
     def bulk_append_new(self, pages, lines) -> None:
-        """Append a batch of (page, line) entries known to be absent from
-        the active buffer, in order (page insertion order is observable at
-        compaction time through the channel timeline). Used by the batched
-        engine; must never fill the log (the caller bounds the batch)."""
+        """Append a batch of (page, line) entries in order (page insertion
+        order is observable at compaction time through the channel
+        timeline). Entries already present are skipped exactly as append()
+        would — callers may pass writes whose pair arrived since they were
+        classified. Used by the batched engine; the batch is bounded so the
+        log can never fill mid-batch (the engine's fill prediction counts
+        candidate-new pairs, an overestimate of the true fill level)."""
         act = self.active
+        n = self.active_n
         for p, l in zip(pages.tolist(), lines.tolist()):
             e = act.get(p)
             if e is None:
-                e = act[p] = {}
-            e[l] = True
-        self.active_n += len(pages)
+                act[p] = {l: True}
+                n += 1
+            elif l not in e:
+                e[l] = True
+                n += 1
+        self.active_n = n
 
     def swap_for_compaction(self) -> Dict[int, Dict[int, bool]]:
         old = self.active

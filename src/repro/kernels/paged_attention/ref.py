@@ -79,5 +79,9 @@ def paged_decode_attention_ref(
     scores = scores / jnp.sqrt(hd).astype(jnp.float32)
     scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgs,bskh->bkgh", w.astype(jnp.float32), v.astype(jnp.float32))
+    # value contraction follows layers.decode_attention to the letter
+    # (weights rounded to the cache dtype first): the tiered engine's greedy
+    # decode must be token-identical to dense decode, so the two paths must
+    # share one arithmetic recipe, not just one math.
+    out = jnp.einsum("bkgs,bskh->bkgh", w.astype(v.dtype), v)
     return out.reshape(B, H, hd).astype(q.dtype)

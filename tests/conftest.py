@@ -1,0 +1,16 @@
+"""Shared test fixtures."""
+import os
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _no_engine_override():
+    """A lingering REPRO_SIM_ENGINE (exported by benchmarks.run --engine
+    sessions) overrides the cfg.engine the parity tests set explicitly,
+    silently turning every reference-vs-batched comparison into a
+    self-comparison. Strip it for the whole test session."""
+    old = os.environ.pop("REPRO_SIM_ENGINE", None)
+    yield
+    if old is not None:
+        os.environ["REPRO_SIM_ENGINE"] = old
