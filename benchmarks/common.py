@@ -35,6 +35,35 @@ from repro.configs.base import SimConfig
 from repro.core.simulator import simulate
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "sim"
+
+
+def physical_cores() -> int:
+    """Physical core count: unique (physical id, core id) pairs from
+    /proc/cpuinfo, so SMT siblings are not double-counted the way
+    ``nproc`` counts them. Falls back to os.cpu_count(). Virtualized
+    containers can still overstate this (two vCPUs pinned to one host
+    core report two topology cores); --jobs overrides when measured
+    scaling says otherwise."""
+    try:
+        pairs = set()
+        phys = core = None
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("physical id"):
+                    phys = line.split(":", 1)[1].strip()
+                elif line.startswith("core id"):
+                    core = line.split(":", 1)[1].strip()
+                elif not line.strip():
+                    if phys is not None and core is not None:
+                        pairs.add((phys, core))
+                    phys = core = None
+        if phys is not None and core is not None:
+            pairs.add((phys, core))
+        if pairs:
+            return len(pairs)
+    except OSError:
+        pass
+    return max(os.cpu_count() or 1, 1)
 WORKLOADS = ("bfs-dense", "bc", "radix", "srad", "ycsb", "tpcc", "dlrm")
 VARIANTS = ("base-cssd", "skybyte-c", "skybyte-p", "skybyte-w",
             "skybyte-cp", "skybyte-wp", "skybyte-full", "dram-only")
@@ -46,7 +75,7 @@ TOTAL_REQ = 1_500_000
 # cls_cache_* counters aggregate the batched engine's classification-cache
 # behaviour over every fresh cell this process simulates (engine.CACHE_STATS
 # is reset per simulate() call, so it is drained here).
-PERF = {"fresh_req": 0, "fresh_wall": 0.0, "cached_hits": 0,
+PERF = {"fresh_req": 0, "fresh_wall": 0.0, "fresh_cpu": 0.0, "cached_hits": 0,
         "cls_cache_checks": 0, "cls_cache_clean": 0, "cls_cache_repairs": 0}
 
 
@@ -128,36 +157,44 @@ def cached_sim(workload: str, variant: str, cfg: SimConfig = SimConfig(),
         PERF["cached_hits"] += 1
         return json.loads(path.read_text())
     t0 = time.time()
+    c0 = time.process_time()
     out = simulate(workload, variant, cfg, total_req=total_req, seed=seed,
                    n_threads=n_threads)
+    cpu = time.process_time() - c0
     wall = time.time() - t0
     PERF["fresh_req"] += out["n"]
     PERF["fresh_wall"] += wall
+    PERF["fresh_cpu"] += cpu
     from repro.core.engine import CACHE_STATS
 
     PERF["cls_cache_checks"] += CACHE_STATS["checks"]
     PERF["cls_cache_clean"] += CACHE_STATS["clean"]
     PERF["cls_cache_repairs"] += CACHE_STATS["repairs"]
     out["wall_s"] = round(wall, 1)
+    # per-worker CPU time: on steal-heavy shared-core boxes this is the
+    # stable perf signal (wall swings +-50%); bench_diff gates on its sum
+    out["cpu_s"] = round(cpu, 2)
     path.write_text(json.dumps(out, indent=1, default=float))
     return json.loads(path.read_text())
 
 
-def _warm_one(spec: Dict[str, Any]) -> Tuple[str, int, float, str, Tuple]:
+def _warm_one(spec: Dict[str, Any]) -> Tuple[str, int, float, float, str,
+                                             Tuple]:
     """Worker: compute one cell into the artifact cache. Returns
-    (cell name, requests simulated, wall seconds, error or "", engine
-    cache counters). A failing cell must not kill the suite — it costs
-    only its own figures."""
+    (cell name, requests simulated, cpu seconds, wall seconds, error or
+    "", engine cache counters). A failing cell must not kill the suite —
+    it costs only its own figures."""
     name = f"{spec['workload']}/{spec['variant']}"
     c0 = (PERF["cls_cache_checks"], PERF["cls_cache_clean"],
           PERF["cls_cache_repairs"])
     try:
         r = cached_sim(**spec)
     except Exception as e:  # noqa: BLE001 - containment boundary
-        return name, 0, 0.0, f"{type(e).__name__}: {e}", (0, 0, 0)
+        return name, 0, 0.0, 0.0, f"{type(e).__name__}: {e}", (0, 0, 0)
     cls = (PERF["cls_cache_checks"] - c0[0], PERF["cls_cache_clean"] - c0[1],
            PERF["cls_cache_repairs"] - c0[2])
-    return name, r.get("n", 0), r.get("wall_s", 0.0), "", cls
+    return (name, r.get("n", 0), r.get("cpu_s", 0.0), r.get("wall_s", 0.0),
+            "", cls)
 
 
 def dedupe_cells(cells: List[Dict[str, Any]],
@@ -183,8 +220,11 @@ def warm_cache(cells: List[Dict[str, Any]], jobs: int = 1,
     """Fan the missing cells of the (workload, variant, figure) grid across
     worker processes. Returns aggregate perf numbers."""
     todo = dedupe_cells(cells, force=force)
+    # cpu_s: summed per-worker process CPU (the gated signal, stable under
+    # steal); wall_sum_s: summed per-cell wall (informational);
+    # wall_s: the fan-out's wall clock.
     stats = {"cells_total": len(cells), "cells_run": len(todo),
-             "req": 0, "cpu_s": 0.0, "wall_s": 0.0,
+             "req": 0, "cpu_s": 0.0, "wall_sum_s": 0.0, "wall_s": 0.0,
              "cls_cache_checks": 0, "cls_cache_clean": 0,
              "cls_cache_repairs": 0}
     if not todo:
@@ -199,9 +239,10 @@ def warm_cache(cells: List[Dict[str, Any]], jobs: int = 1,
     jobs = max(1, min(jobs, len(todo)))
 
     def drain(results) -> None:
-        for k, (name, req, wall, err, cls) in enumerate(results):
+        for k, (name, req, cpu, wall, err, cls) in enumerate(results):
             stats["req"] += req
-            stats["cpu_s"] += wall
+            stats["cpu_s"] += cpu
+            stats["wall_sum_s"] += wall
             stats["cls_cache_checks"] += cls[0]
             stats["cls_cache_clean"] += cls[1]
             stats["cls_cache_repairs"] += cls[2]
@@ -210,8 +251,8 @@ def warm_cache(cells: List[Dict[str, Any]], jobs: int = 1,
                 print(f"# warm [{k + 1}/{len(todo)}] {name} FAILED: {err}",
                       flush=True)
             elif verbose:
-                print(f"# warm [{k + 1}/{len(todo)}] {name} ({wall:.0f}s)",
-                      flush=True)
+                print(f"# warm [{k + 1}/{len(todo)}] {name} "
+                      f"({cpu:.0f}s cpu / {wall:.0f}s wall)", flush=True)
 
     if jobs == 1:
         drain(map(_warm_one, todo))

@@ -113,9 +113,12 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
-    ap.add_argument("--jobs", type=int, default=1,
+    ap.add_argument("--jobs", type=int, default=0,
                     help="worker processes for the simulation grid "
-                         "(default 1; try $(nproc))")
+                         "(default 0 = one per detected PHYSICAL core; "
+                         "nproc counts SMT/vCPU siblings that share "
+                         "execution resources and inflate grid CPU time "
+                         "for marginal wall gain)")
     ap.add_argument("--engine", default="",
                     choices=["", "reference", "batched"],
                     help="force a replay engine (default: SimConfig default)")
@@ -125,6 +128,14 @@ def main(argv=None) -> None:
                     help="skip the engine-throughput calibration runs")
     args = ap.parse_args(argv)
     only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    if args.jobs <= 0:
+        phys = common.physical_cores()
+        logical = os.cpu_count() or 1
+        args.jobs = phys
+        print(f"# jobs auto-detect: {phys} physical core(s) "
+              f"({logical} logical; SMT/vCPU siblings excluded) "
+              f"-> --jobs {args.jobs}", flush=True)
 
     if args.engine:
         os.environ["REPRO_SIM_ENGINE"] = args.engine
@@ -163,6 +174,7 @@ def main(argv=None) -> None:
     # could not be enumerated must carry --force itself (serial but correct).
     for name, mod, n in selected:
         t1 = time.time()
+        c1 = time.process_time()
         hits0 = common.PERF["cached_hits"]
         try:
             mod.main(total_req=n, force=args.force and name not in enumerated)
@@ -171,13 +183,17 @@ def main(argv=None) -> None:
             status = f"{type(e).__name__}: {e}"
             print(f"# {name} FAILED: {status}", file=sys.stderr)
         wall = time.time() - t1
+        # render cpu (process_time covers in-process cell sims too): the
+        # stable signal bench_diff gates on; wall stays informational
+        cpu = time.process_time() - c1
         report["sections"][name] = {
             "wall_s": round(wall, 2),
+            "cpu_s": round(cpu, 2),
             "total_req": n,
             "cache_hits": common.PERF["cached_hits"] - hits0,
             "status": status,
         }
-        print(f"# {name} done in {wall:.1f}s\n", flush=True)
+        print(f"# {name} done in {wall:.1f}s ({cpu:.1f}s cpu)\n", flush=True)
 
     if not args.skip_roofline and (not only or "roofline" in only):
         try:

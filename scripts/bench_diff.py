@@ -1,14 +1,17 @@
 """Diff a fresh BENCH_sim.json against the committed reference baseline.
 
-Fails (exit 1) when any section's wall clock regresses by more than
---tolerance (default 20%) relative to BENCH_baseline.json, or when a
-baseline section is missing from the fresh run. Sections only present in
-the fresh run are reported but never fail (new benchmarks are not
-regressions).
+Gates on **CPU time** (grid worker CPU + per-section render CPU): the
+shared-core CI container's wall clock swings +-50% with steal, which made
+the original >20% wall gate a latent flake. Wall clocks are still printed,
+but as information only — they never fail the run.
 
-Wall clocks on shared CI boxes are steal-noisy, so the check is applied to
-per-section render wall AND to the grid's cpu seconds (the more stable
-signal); --tolerance applies to both.
+Fails (exit 1) when:
+  * a baseline section ran but errored in the fresh run, or
+  * the grid's summed worker CPU regresses by more than --tolerance over
+    the same number of freshly simulated cells, or
+  * a section's render CPU regresses by more than --tolerance (only
+    sections spending >= 1s of CPU are gated; faster renders measure
+    interpreter noise, not code).
 
   PYTHONPATH=src python scripts/bench_diff.py \
       --baseline BENCH_baseline.json --fresh BENCH_sim.json
@@ -21,32 +24,36 @@ import sys
 from pathlib import Path
 
 
-def _section_walls(report: dict) -> dict:
-    return {name: sec.get("wall_s", 0.0)
+def _sections(report: dict, key: str) -> dict:
+    return {name: sec.get(key, 0.0)
             for name, sec in report.get("sections", {}).items()
             if sec.get("status") == "ok"}
 
 
-def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
-    """Returns a list of human-readable regression strings (empty = pass)."""
+def compare(baseline: dict, fresh: dict, tolerance: float) -> tuple:
+    """Returns (problems, infos): problems fail the gate, infos do not."""
     problems = []
-    base_w = _section_walls(baseline)
-    fresh_w = _section_walls(fresh)
-    for name, bw in sorted(base_w.items()):
-        if name not in fresh_w:
+    infos = []
+    base_cpu = _sections(baseline, "cpu_s")
+    fresh_cpu = _sections(fresh, "cpu_s")
+    base_wall = _sections(baseline, "wall_s")
+    fresh_wall = _sections(fresh, "wall_s")
+    for name, bc in sorted(base_cpu.items()):
+        if name not in fresh_cpu:
             # partial runs (ci.sh smokes a section subset) are fine; a
-            # section that RAN but errored is caught by _section_walls
-            # requiring status == "ok" on the fresh side below
+            # section that RAN but errored fails
             if name in fresh.get("sections", {}):
                 problems.append(f"section {name}: status "
                                 f"{fresh['sections'][name].get('status')!r}")
             continue
-        fw = fresh_w[name]
-        # sub-second sections are render-only (warm cache); absolute jitter
-        # there is scheduling noise, not regression
+        fc = fresh_cpu[name]
+        if bc >= 1.0 and fc > bc * (1.0 + tolerance):
+            problems.append(f"section {name}: {fc:.2f}s cpu vs baseline "
+                            f"{bc:.2f}s (+{(fc / bc - 1.0) * 100:.0f}%)")
+        bw, fw = base_wall.get(name, 0.0), fresh_wall.get(name, 0.0)
         if bw >= 1.0 and fw > bw * (1.0 + tolerance):
-            problems.append(f"section {name}: {fw:.2f}s vs baseline "
-                            f"{bw:.2f}s (+{(fw / bw - 1.0) * 100:.0f}%)")
+            infos.append(f"section {name} wall: {fw:.2f}s vs {bw:.2f}s "
+                         f"(informational; steal-noisy)")
     bg = baseline.get("grid", {}).get("cpu_s", 0.0)
     fg = fresh.get("grid", {}).get("cpu_s", 0.0)
     bn = baseline.get("grid", {}).get("cells_run", 0)
@@ -56,7 +63,11 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
     if bn and fn == bn and bg >= 1.0 and fg > bg * (1.0 + tolerance):
         problems.append(f"grid cpu: {fg:.0f}s vs baseline {bg:.0f}s "
                         f"(+{(fg / bg - 1.0) * 100:.0f}%) over {fn} cells")
-    return problems
+    bgw = baseline.get("grid", {}).get("wall_s", 0.0)
+    fgw = fresh.get("grid", {}).get("wall_s", 0.0)
+    if bn and fn == bn and bgw >= 1.0 and fgw > bgw * (1.0 + tolerance):
+        infos.append(f"grid wall: {fgw:.0f}s vs {bgw:.0f}s (informational)")
+    return problems, infos
 
 
 def main(argv=None) -> int:
@@ -64,7 +75,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--fresh", default="BENCH_sim.json")
     ap.add_argument("--tolerance", type=float, default=0.20,
-                    help="allowed fractional regression (default 0.20)")
+                    help="allowed fractional CPU regression (default 0.20)")
     args = ap.parse_args(argv)
     bpath, fpath = Path(args.baseline), Path(args.fresh)
     if not bpath.exists():
@@ -80,15 +91,21 @@ def main(argv=None) -> int:
         print("# bench_diff: baseline and fresh runs used different --quick "
               "settings; sections are not comparable, skipping")
         return 0
-    problems = compare(baseline, fresh, args.tolerance)
+    if not any("cpu_s" in s for s in baseline.get("sections", {}).values()):
+        print("# bench_diff: baseline predates per-section cpu_s; "
+              "re-baseline from a run of this revision, skipping")
+        return 0
+    problems, infos = compare(baseline, fresh, args.tolerance)
+    for note in infos:
+        print(f"# bench_diff info: {note}")
     if problems:
-        print("bench_diff: wall-clock regressions beyond "
-              f"{args.tolerance:.0%}:", file=sys.stderr)
+        print(f"bench_diff: CPU regressions beyond {args.tolerance:.0%}:",
+              file=sys.stderr)
         for p in problems:
             print(f"  - {p}", file=sys.stderr)
         return 1
-    print(f"# bench_diff: {len(_section_walls(fresh))} sections within "
-          f"{args.tolerance:.0%} of baseline")
+    print(f"# bench_diff: {len(_sections(fresh, 'cpu_s'))} sections within "
+          f"{args.tolerance:.0%} of baseline (CPU time)")
     return 0
 
 

@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
-# CI entry point: engine-parity smoke + tier-1 tests + a parallel smoke of
-# the benchmark orchestrator diffed against the committed baseline.
+# CI entry point: engine-parity smoke + tier-1 tests + a reference-engine
+# pass over the simulator test subset + a parallel smoke of the benchmark
+# orchestrator diffed against the committed baseline.
 # Mirrors what a GitHub Actions job would run; keep it fast (~10 min on
 # 2 cores).
 #
 #   bash scripts/ci.sh            # everything
 #   bash scripts/ci.sh parity     # engine-parity smoke only (~15 s)
 #   bash scripts/ci.sh tests      # tier-1 pytest only
+#   bash scripts/ci.sh ref        # simulator tests on the reference engine
 #   bash scripts/ci.sh bench      # orchestrator smoke + baseline diff
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,8 +18,9 @@ STAGE="${1:-all}"
 
 if [[ "$STAGE" == "all" || "$STAGE" == "parity" ]]; then
   echo "== engine parity smoke (ctx-bound + stable-state, both engines) =="
-  # Runs before everything else: if the batched engine's classification
-  # cache breaks bit-compatibility, fail in seconds, not after the suite.
+  # Runs before everything else: if the batched engine breaks
+  # bit-compatibility against the shared DeviceState, fail in seconds,
+  # not after the suite.
   python scripts/parity_smoke.py
 fi
 
@@ -28,16 +31,35 @@ if [[ "$STAGE" == "all" || "$STAGE" == "tests" ]]; then
   python -m pytest -x -q
 fi
 
+if [[ "$STAGE" == "all" || "$STAGE" == "ref" ]]; then
+  echo "== simulator subset on the REFERENCE engine =="
+  # Both engines mutate one DeviceState; pairwise parity alone would miss
+  # a bug that breaks both identically. Forcing the reference engine over
+  # the behavioural simulator tests catches reference-side drift against
+  # the shared state directly.
+  # REPRO_SIM_ENGINE_PIN=1 tells tests/conftest.py the override is
+  # deliberate (it otherwise strips REPRO_SIM_ENGINE so leaked env can't
+  # turn parity suites into self-comparisons)
+  REPRO_SIM_ENGINE=reference REPRO_SIM_ENGINE_PIN=1 \
+    python -m pytest -x -q tests/test_simulator.py
+fi
+
 if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then
-  echo "== benchmark orchestrator smoke (--quick --jobs 2) =="
+  echo "== benchmark orchestrator smoke (--quick, auto physical-core jobs) =="
   # Two representative sections: fig14 covers the full 7x8 variant grid,
   # fig9 covers per-cfg cache keys. --profile prints grid req/s.
-  python -m benchmarks.run --quick --jobs 2 --only fig14,fig9 \
+  python -m benchmarks.run --quick --only fig14,fig9 \
     --skip-roofline --profile
   test -f BENCH_sim.json && echo "BENCH_sim.json written"
-  echo "== wall-clock diff vs committed baseline (>20% regression fails) =="
+  echo "== CPU-time diff vs committed baseline (wall is informational) =="
+  # CPU time is the gated signal: wall swings +-50% with steal on this
+  # container class. CPU itself still inflates up to ~40% when a noisy
+  # neighbour sits on the SMT sibling (process_time counts scheduled
+  # seconds, and IPC drops), so the gate gets 35% headroom — real engine
+  # regressions we care about are larger, and the old 20% *wall* gate
+  # was a latent flake.
   python scripts/bench_diff.py --baseline BENCH_baseline.json \
-    --fresh BENCH_sim.json --tolerance 0.20
+    --fresh BENCH_sim.json --tolerance 0.35
 fi
 
 echo "CI OK"

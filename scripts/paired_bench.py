@@ -1,0 +1,79 @@
+"""Paired A/B CPU-time benchmark: this checkout vs a worktree of another
+commit, interleaved in the same time window so shared-core steal noise
+cancels. Used to validate engine-perf acceptance criteria; results land in
+BENCH_sim.json under "paired_vs_head" when run via --json.
+
+  PYTHONPATH=src python scripts/paired_bench.py /tmp/pr2head [--json out]
+
+Each cell is run alternately (A, B, A, B, ...) with ``--reps`` repetitions
+and scored by best-of CPU time (time.process_time of a child worker),
+which on a steal-heavy container is the stable signal (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+CELLS = (
+    ("bfs-dense", "skybyte-c"),
+    ("bfs-dense", "skybyte-full"),
+    ("tpcc", "skybyte-full"),
+    ("srad", "skybyte-w"),
+    ("tpcc", "base-cssd"),
+    ("ycsb", "dram-only"),
+)
+
+_WORKER = r"""
+import dataclasses, sys, time
+from repro.configs.base import SimConfig
+from repro.core.simulator import simulate
+wl, variant, n = sys.argv[1], sys.argv[2], int(sys.argv[3])
+cfg = dataclasses.replace(SimConfig(), engine="batched")
+t0 = time.process_time()
+simulate(wl, variant, cfg, total_req=n, seed=0)
+print(time.process_time() - t0)
+"""
+
+
+def run_cell(root: Path, wl: str, variant: str, n: int) -> float:
+    out = subprocess.run(
+        [sys.executable, "-c", _WORKER, wl, variant, str(n)],
+        capture_output=True, text=True, check=True,
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    return float(out.stdout.strip())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline_root", help="worktree of the commit to compare against")
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+    here = Path(__file__).resolve().parent.parent
+    base = Path(args.baseline_root)
+    results = {}
+    for wl, variant in CELLS:
+        a_best = b_best = float("inf")
+        for _ in range(args.reps):  # interleaved: same steal window for both
+            b_best = min(b_best, run_cell(base, wl, variant, args.n))
+            a_best = min(a_best, run_cell(here, wl, variant, args.n))
+        speedup = b_best / max(a_best, 1e-9)
+        results[f"{wl}/{variant}"] = {
+            "head_cpu_s": round(b_best, 3),
+            "this_cpu_s": round(a_best, 3),
+            "speedup": round(speedup, 2),
+        }
+        print(f"{wl}/{variant}: head={b_best:.3f}s this={a_best:.3f}s "
+              f"({speedup:.2f}x)", flush=True)
+    if args.json:
+        Path(args.json).write_text(json.dumps(results, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -302,10 +302,13 @@ class SimConfig:
     scale: int = 128  # divide all capacities by this (ratios preserved)
     cache_ways: int = 8
     # --- replay engine ---
+    # Both engines operate on one authoritative DeviceState
+    # (core/device_state.py); there are no engine-private state mirrors.
     # "batched": vectorized fast path (core/engine.py), statistically
-    #   bit-compatible with the reference loop; falls back to "reference"
-    #   for configs it cannot reproduce exactly (tpp/astriflash promotion).
-    # "reference": the original per-event Python loop (ground truth).
+    #   bit-compatible with the reference loop; every state-changing
+    #   boundary is transcribed in the engine itself.
+    # "reference": the original per-event Python loop (ground truth;
+    #   Machine.serve() survives as its parity oracle).
     engine: str = "batched"
     # Cross-quantum classification cache (batched engine only; see
     # core/engine.py). Classification work persists across scheduling
@@ -315,8 +318,13 @@ class SimConfig:
     cls_cache: bool = True
     # Minimum fast-run-length EWMA to run the cached vector path; below it
     # boundary-density makes per-event inline replay cheaper than
-    # per-boundary cache repair.
-    cls_cache_min_run: float = 20.0
+    # per-boundary cache repair. Since the unified-DeviceState refactor the
+    # inline span executes misses/evictions/GC over the shared arrays with
+    # no per-event dispatch, which moved the measured break-even from ~20
+    # events up to the no-cache vectorization threshold (~192): NumPy
+    # dispatch on boundary-sized chunks costs more than the span's
+    # per-event loop for anything shorter.
+    cls_cache_min_run: float = 192.0
     # Cap on the classified-range length (events) a thread caches ahead;
     # the range otherwise scales with the engine's adaptive chunk.
     cls_cache_window: int = 65536

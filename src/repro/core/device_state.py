@@ -1,0 +1,179 @@
+"""Unified structure-of-arrays device state — the single source of truth.
+
+Every piece of mutable CXL-SSD device state lives here, dense and indexed
+by page, plus the few ordered structures the policies need (host-DRAM LRU
+order, write-log insertion order, per-set slot tables). The policy/view
+classes in ``ssd.py`` and BOTH replay engines read and mutate *these*
+fields — there is no second copy anywhere. PR 2's shadow-mirror subclasses
+(which re-applied every membership mutation into engine-private dense
+arrays) are gone: the reference event loop and the batched engine literally
+share the same arrays, so membership can never drift between them.
+
+The arrays double as the batched engine's classification inputs:
+
+  ``host.arr`` / ``cache_res``  membership (bool; gathered per chunk)
+  ``log_bits``                  per-page 64-bit line-presence bitmask
+  ``acc.arr``                   promotion counters (int64)
+  ``cache_stamp``               LRU stamps (int64; a bulk LRU touch is ONE
+                                scatter — last write wins reproduces the
+                                reference's last-occurrence move order)
+  ``page_epoch``                per-page version counters driving the
+                                cross-quantum classification cache
+
+Epoch discipline (see engine.py): every *membership* mutation — cache
+insert/evict/remove, host promote/demote, compaction floods — calls
+``bump``/``bump_list``; write-log *appends* deliberately do not (line
+presence only grows between compactions and is absorbed by the engine's
+log overlay instead). The journal names the pages bumped by the boundary
+event in flight so the engine can fold them back into a live
+classification cache mid-quantum.
+
+Scalar-hot fields use ``memoryview`` mirrors (Python-int get/set is ~4x
+cheaper than NumPy scalar indexing); the ndarray views are what the vector
+path fancy-indexes. Channel/die busy timelines are plain Python float
+lists: they are only ever touched scalar-wise (per flash op), where lists
+beat any NumPy representation.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import List
+
+import numpy as np
+
+from repro.configs.base import SimConfig
+
+DIES_PER_CHANNEL = 64  # Table II: 8 chips/channel x 8 dies/chip
+
+
+class HostLru(OrderedDict):
+    """Host-DRAM page tier: authoritative LRU order (dict order) plus the
+    dense membership mirror and epoch bumps on membership changes."""
+
+    def __init__(self, state: "DeviceState", page_space: int):
+        super().__init__()
+        self.arr = np.zeros(page_space, bool)
+        self._mv = memoryview(self.arr)
+        self._ds = state
+
+    def __setitem__(self, page, value) -> None:
+        super().__setitem__(page, value)
+        self._mv[page] = True
+        self._ds.bump(page)
+
+    def popitem(self, last: bool = True):
+        page, value = super().popitem(last)
+        self._mv[page] = False
+        self._ds.bump(page)
+        return page, value
+
+
+class PromoCounts:
+    """Dense per-page promotion counters with the dict API the promotion
+    policy uses (.get / item assignment)."""
+
+    __slots__ = ("arr", "_mv")
+
+    def __init__(self, page_space: int):
+        self.arr = np.zeros(page_space, np.int64)
+        self._mv = memoryview(self.arr)
+
+    def get(self, page: int, default: int = 0) -> int:
+        return self._mv[page]
+
+    def __setitem__(self, page: int, value: int) -> None:
+        self._mv[page] = value
+
+
+class DeviceState:
+    """All mutable device state for one simulated CXL-SSD."""
+
+    __slots__ = (
+        "page_space",
+        # epochs
+        "page_epoch", "epoch_mv", "epoch_clock", "journal",
+        # host tier
+        "host",
+        # SSD DRAM page cache (set-associative, stamp-LRU)
+        "cache_res", "cache_res_mv", "cache_dirty", "cache_dirty_mv",
+        "cache_stamp", "cache_stamp_mv", "cache_clock",
+        "cache_sets", "cache_way", "cache_ways", "cache_n_sets",
+        # cacheline write log (double-buffered)
+        "log_bits", "log_active", "log_old", "log_active_n", "log_cap",
+        "log_compactions", "log_flushed_pages", "log_flushed_lines",
+        # flash channels / dies
+        "chan_bus", "chan_die", "chan_busy_ns",
+        "flash_reads", "flash_writes", "gc_events",
+        # FTL free-page accounting
+        "ftl_total", "ftl_used",
+        # promotion counters
+        "acc",
+    )
+
+    def __init__(self, cfg: SimConfig, page_space: int):
+        self.page_space = page_space
+        # --- epoch board ---
+        self.page_epoch = np.zeros(page_space, np.int64)
+        self.epoch_mv = memoryview(self.page_epoch)
+        self.epoch_clock = 0
+        self.journal: List[int] = []
+        # --- host tier ---
+        self.host = HostLru(self, page_space)
+        # --- data cache: per-page membership/dirty/stamp arrays + per-set
+        # slot tables. LRU order is the stamp order (a fresh monotone stamp
+        # per touch/insert reproduces OrderedDict move-to-end semantics
+        # exactly); the victim of a full set is its min-stamp slot. ---
+        ways = max(cfg.cache_ways, 1)
+        n_sets = max(cfg.cache_pages // ways, 1)
+        self.cache_ways = ways
+        self.cache_n_sets = n_sets
+        self.cache_res = np.zeros(page_space, bool)
+        self.cache_res_mv = memoryview(self.cache_res)
+        self.cache_dirty = np.zeros(page_space, bool)
+        self.cache_dirty_mv = memoryview(self.cache_dirty)
+        self.cache_stamp = np.zeros(page_space, np.int64)
+        self.cache_stamp_mv = memoryview(self.cache_stamp)
+        self.cache_clock = 0
+        self.cache_sets = [[-1] * ways for _ in range(n_sets)]
+        self.cache_way = [-1] * page_space
+        # --- write log (allocated only when the variant enables it) ---
+        if cfg.enable_write_log:
+            self.log_bits = np.zeros(page_space, np.uint64)
+            self.log_active = {}
+            self.log_old = {}
+            self.log_active_n = 0
+            self.log_cap = max(cfg.log_entries // 2, 16)  # per buffer
+        else:
+            self.log_bits = None
+            self.log_active = None
+            self.log_old = None
+            self.log_active_n = 0
+            self.log_cap = 0
+        self.log_compactions = 0
+        self.log_flushed_pages = 0
+        self.log_flushed_lines = 0
+        # --- flash timing state ---
+        self.chan_bus = [0.0] * cfg.n_channels
+        self.chan_die = [[0.0] * DIES_PER_CHANNEL for _ in range(cfg.n_channels)]
+        self.chan_busy_ns = 0.0
+        self.flash_reads = 0
+        self.flash_writes = 0
+        self.gc_events = 0
+        # --- FTL ---
+        self.ftl_total = max(cfg.n_flash_pages, 1)
+        self.ftl_used = int(self.ftl_total * cfg.gc_threshold)  # preconditioned
+        # --- promotion counters ---
+        self.acc = PromoCounts(page_space)
+
+    # ---- epoch bumps (called by the ssd.py views and HostLru) ----
+    def bump(self, page: int) -> None:
+        c = self.epoch_clock + 1
+        self.epoch_clock = c
+        self.epoch_mv[page] = c
+        self.journal.append(page)
+
+    def bump_list(self, pages: list) -> None:
+        c = self.epoch_clock + len(pages)
+        self.epoch_clock = c
+        self.page_epoch[pages] = c
+        self.journal.extend(pages)

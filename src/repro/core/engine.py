@@ -2,17 +2,11 @@
 
 The reference engine in simulator.py retires one request per Python
 iteration (~100-250k req/s). This engine processes each scheduling quantum
-in structure-of-arrays batches instead, and — new in this revision — keeps
-the expensive part of that work (per-event *classification* against the
-device state) in a **cross-quantum cache** so it is paid once per thread,
-not once per quantum.
-
-Why: SkyByte's coordinated context switches cap quanta at ~1/miss-rate
-events (~50-80 on ULL flash), far below the break-even of a per-quantum
-NumPy classification pass. Re-deriving the same per-page state for the
-same thread every time it is rescheduled made the ctx-switch-bound cells
-(SkyByte-C/Full) the slowest in the grid. The cache removes exactly that
-recomputation:
+in structure-of-arrays batches over the SAME ``DeviceState`` the reference
+loop uses (device_state.py) — since the unified-state refactor there are
+no engine-private mirrors to keep in sync: the membership arrays, LRU
+stamps, log bitmasks, promotion counters and page epochs it classifies
+against ARE the device state, mutated through the ssd.py policy views.
 
   * **Classification cache** — each thread carries a classified *range*
     of its upcoming trace (``SimConfig.cls_cache_window`` events at most),
@@ -22,33 +16,40 @@ recomputation:
     range survives across quanta and is re-classified only when the epoch
     check proves it stale or the thread consumes past its end.
   * **Epoch-based page-version repair** — every membership mutation bumps
-    a per-page epoch counter on the machine (``BatchedMachine.page_epoch``):
-    cache inserts/evictions, host promotions and demotions, and log
-    compactions (which invalidate every logged line of the drained buffer
-    at once). On quantum re-entry the engine takes the max epoch of the
-    remaining range's pages (one gather) and compares it against the
-    range's stamp — clean means the codes are provably current for the
-    whole quantum (quanta are serial: no other thread can run mid-quantum)
-    and the stamp advances; dirty means the range is re-classified from
-    the current position in one vector pass. Mid-quantum, the only
-    mutators are this thread's own boundary events; the pages they bump
-    are recorded in a tiny journal and folded back in place (re-classify
-    just their range positions), after which the stamp advances again.
-    Log *appends* deliberately do not
-    bump epochs (warm write pages are appended to constantly by every
-    thread and would keep every cache dirty); line presence only grows
-    between compactions, so the prefix about to be bulk-applied is instead
-    brought current by a tiny targeted overlay (see _log_overlay).
+    a per-page epoch counter (``DeviceState.bump``): cache
+    inserts/evictions, host promotions and demotions, and log compactions
+    (which invalidate every logged line of the drained buffer at once).
+    On quantum re-entry the engine takes the max epoch of the remaining
+    range's pages (one gather) and compares it against the range's stamp —
+    clean means the codes are provably current for the whole quantum
+    (quanta are serial: no other thread can run mid-quantum) and the stamp
+    advances; dirty means the range is re-classified from the current
+    position in one vector pass. Mid-quantum, the only mutators are this
+    thread's own boundary events; the pages they bump are recorded in the
+    state's journal and folded back in place (re-classify just their range
+    positions), after which the stamp advances again. Log *appends*
+    deliberately do not bump epochs (warm write pages are appended to
+    constantly by every thread and would keep every cache dirty); line
+    presence only grows between compactions, so the prefix about to be
+    bulk-applied is instead brought current by a tiny targeted overlay
+    (see _log_overlay).
   * **Fused exact accumulators** — the four sequential float chains the
     reference maintains (core time, lat_sum, lat_host, lat_hit) are
     replayed with ONE cumsum over a 4-row buffer whose unused slots are
     zero: IEEE addition of +0.0 is exact, so each row reproduces the
     reference's left-to-right addition order bit-for-bit.
+  * **Transcribed boundaries** — every state-changing event (flash read
+    misses with fills/evictions/GC, Base-CSSD write misses, write-log
+    fills and their compaction drain, predicted promotions/demotions) is
+    executed by an exact transcription inside this module, against the
+    shared state, in ``Machine.serve()``'s operation order to the letter.
+    ``serve()`` itself is never called by this engine — it survives as the
+    reference loop's per-event oracle only.
   * **Inline spans** — when observed fast-run lengths drop below the cache
     break-even (``SimConfig.cls_cache_min_run``; boundary-dense phases
     such as Base-CSSD write storms), the engine switches to the tuned
-    per-event loop: serve()'s state-stable cases inlined with *identical*
-    operation order, full serve() only at state-changing events.
+    per-event loop: every serve() case inlined with *identical* operation
+    order.
 
 Extended class codes (int8; one per trace position):
 
@@ -58,14 +59,13 @@ Extended class codes (int8; one per trace position):
   3 data-cache read hit     7 boundary (miss / fill / slow path)
 
 Codes 0-6 are *state-stable*: their device-state effects are closed-form
-under a snapshot. Code 7 events run the exact per-event path
-(Machine.serve). Write-log fills and page promotions are *predicted*
-boundaries found from the cached codes (cumulative new-pair counts vs the
-log headroom; per-page running access counts vs the promotion threshold).
-Store-to-load forwarding is encoded at classification time: a read of a
-(page, line) pair whose first in-window write precedes it is classified a
-log hit, which stays correct across quanta because any other writer of
-that page bumps its epoch.
+under a snapshot. Code 7 events run the transcribed slow paths. Write-log
+fills and page promotions are *predicted* boundaries found from the cached
+codes (cumulative new-pair counts vs the log headroom; per-page running
+access counts vs the promotion threshold). Store-to-load forwarding is
+encoded at classification time: a read of a (page, line) pair whose first
+in-window write precedes it is classified a log hit, which stays correct
+across quanta because any other writer of that page bumps its epoch.
 
 Exactness contract (enforced by tests/test_engine.py and
 tests/test_engine_cache.py): for the same seed the batched engine — with
@@ -81,18 +81,20 @@ per-event order keeps even the RNG stream exact.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-
 import numpy as np
 
 from repro.configs.base import SimConfig
-from repro.core.simulator import Machine, Thread, _record, _replay_prologue
-from repro.core.ssd import DataCache, WriteLog
+from repro.core.device_state import DIES_PER_CHANNEL
+from repro.core.simulator import Machine, Thread, _record
+from repro.core.ssd import TRANSFER_NS
 
 # Vectorization break-even WITHOUT the classification cache: below this
 # expected fast-run length the inline per-event span loop beats per-chunk
 # NumPy classify + dispatch overhead. (With the cache the break-even is
-# SimConfig.cls_cache_min_run, far lower: classification is pre-paid.)
+# SimConfig.cls_cache_min_run; since the unified-state refactor inlined
+# the span's miss machinery its default sits AT this threshold — see the
+# knob's comment in configs/base.py — and lowering it only pays on boxes
+# with cheaper NumPy dispatch than the CI container's ~3.5us.)
 _VEC_MIN = 192
 _CHUNK_MAX = 8192
 _CHUNK_FLOOR = 64
@@ -141,111 +143,6 @@ def supported(cfg: SimConfig) -> bool:
     return True
 
 
-class _ArrayCounts:
-    """Dense per-page promotion counters, API-compatible with the dict
-    Machine.acc_count (only .get and item assignment are used)."""
-
-    __slots__ = ("arr",)
-
-    def __init__(self, page_space: int):
-        self.arr = np.zeros(page_space, np.int64)
-
-    def get(self, page: int, default: int = 0) -> int:
-        return int(self.arr[page])
-
-    def __setitem__(self, page: int, value: int) -> None:
-        self.arr[page] = value
-
-
-class _ShadowHost(OrderedDict):
-    """Host-DRAM LRU with a dense membership mirror and epoch bumps on
-    membership changes. Scalar mirror writes go through a memoryview
-    (~4x cheaper than NumPy scalar indexing); the ndarray view is what
-    the vector path fancy-indexes."""
-
-    def __init__(self, machine: "BatchedMachine", page_space: int):
-        super().__init__()
-        self.arr = np.zeros(page_space, bool)
-        self._mv = memoryview(self.arr)
-        self._m = machine
-
-    def __setitem__(self, page, value) -> None:
-        super().__setitem__(page, value)
-        self._mv[page] = True
-        self._m._bump(page)
-
-    def popitem(self, last: bool = True):
-        page, value = super().popitem(last)
-        self._mv[page] = False
-        self._m._bump(page)
-        return page, value
-
-
-class _ShadowCache(DataCache):
-    """DataCache with a dense membership mirror (memoryview for scalar
-    writes, ndarray for the vector path's bulk reads) and epoch bumps on
-    inserts/evictions/removals."""
-
-    def __init__(self, machine: "BatchedMachine", cfg: SimConfig, page_space: int):
-        super().__init__(cfg)
-        self.arr = np.zeros(page_space, bool)
-        self._mv = memoryview(self.arr)
-        self._m = machine
-
-    def insert(self, page, dirty):
-        ev = super().insert(page, dirty)
-        self._mv[page] = True
-        self._m._bump(page)
-        if ev is not None:
-            self._mv[ev[0]] = False
-            self._m._bump(ev[0])
-        return ev
-
-    def remove(self, page) -> None:
-        super().remove(page)
-        self._mv[page] = False
-        self._m._bump(page)
-
-
-class _ShadowLog(WriteLog):
-    """WriteLog with a per-page 64-bit line-presence bitmask mirror of the
-    active buffer (the old buffer is only non-empty inside _compact, which
-    never overlaps the fast path).
-
-    Appends do NOT bump epochs: line presence only ever *grows* between
-    compactions, so cached codes are brought current by the cheap per-chunk
-    log overlay in batched_quantum (reads of now-present lines -> log hits,
-    new-pair writes -> duplicates) instead of by page repair — warm write
-    pages are appended to constantly by every thread, and bumping them
-    would keep every cache permanently dirty. A compaction breaks the
-    monotonicity (lines vanish all at once), so it bumps every page the
-    drained buffer held."""
-
-    def __init__(self, machine: "BatchedMachine", cfg: SimConfig, page_space: int):
-        super().__init__(cfg)
-        self.bits = np.zeros(page_space, np.uint64)
-        self._m = machine
-
-    def append(self, page, line):
-        self.bits[page] |= np.uint64(1 << line)
-        return super().append(page, line)
-
-    def bulk_append_new(self, pages: np.ndarray, lines: np.ndarray) -> None:
-        # bitwise_or.at: pages may repeat within a batch (several new lines
-        # of one page); plain fancy-index |= would drop all but one OR.
-        # Setting bits for pairs the dup-tolerant base append then skips is
-        # harmless — they are already present by definition.
-        np.bitwise_or.at(self.bits, pages, np.uint64(1) << lines.astype(np.uint64))
-        super().bulk_append_new(pages, lines)
-
-    def swap_for_compaction(self):
-        self.bits[:] = 0
-        old_pages = list(self.active)
-        if old_pages:
-            self._m._bump_list(old_pages)
-        return super().swap_for_compaction()
-
-
 class _ClsCache:
     """Per-thread cross-quantum classification cache.
 
@@ -266,28 +163,14 @@ class _ClsCache:
 
 
 class BatchedMachine(Machine):
-    """Machine whose device structures carry dense NumPy mirrors plus
-    per-page epoch counters, so whole chunks of the trace can be
-    classified without per-event Python — and stay classified across
-    scheduling quanta."""
+    """Machine plus the batched engine's bookkeeping: per-thread
+    classification caches, the adaptive chunk/run-length state, and
+    precomputed latency constants. All *device* state lives in the
+    inherited ``self.state`` — shared, not mirrored."""
 
     def __init__(self, cfg: SimConfig, seed: int, page_space: int):
-        super().__init__(cfg, seed)
-        self.page_space = page_space
-        # --- epoch board: every membership mutation (host / cache /
-        # compaction) bumps the touched page's epoch; classification
-        # caches compare range page epochs against their stamp. The
-        # journal names the pages bumped by the boundary event in flight
-        # so they can be folded back into the live cache immediately ---
-        self.page_epoch = np.zeros(page_space, np.int64)
-        self._epoch_mv = memoryview(self.page_epoch)
-        self.epoch_clock = 0
-        self.journal: list = []
-        self.cache = _ShadowCache(self, cfg, page_space)
-        if cfg.enable_write_log:
-            self.log = _ShadowLog(self, cfg, page_space)
-        self.host = _ShadowHost(self, page_space)
-        self.acc_count = _ArrayCounts(page_space)
+        super().__init__(cfg, seed, page_space)
+        self.page_space = self.state.page_space
         # stochastic promotion consumes RNG per access: only the strictly
         # per-event inline span preserves the draw order
         self._inline_only = cfg.enable_promotion and cfg.promo_policy != "skybyte"
@@ -311,20 +194,32 @@ class BatchedMachine(Machine):
         self._lat_lut8 = np.array([lat_host, lat_host, lat_log, lat_cache,
                                    lat_log, lat_log, lat_cache, 0.0])
         self._lat_log = lat_log
+        self._lat_cache = lat_cache
         self._counting = cfg.enable_promotion and cfg.promo_policy == "skybyte"
-
-    # ---- epoch bumps (called by the shadow structures) ----
-    def _bump(self, page: int) -> None:
-        c = self.epoch_clock + 1
-        self.epoch_clock = c
-        self._epoch_mv[page] = c
-        self.journal.append(page)
-
-    def _bump_list(self, pages: list) -> None:
-        c = self.epoch_clock + len(pages)
-        self.epoch_clock = c
-        self.page_epoch[pages] = c
-        self.journal.extend(pages)
+        # Invariant locals of the inline span, packed once: a quantum in a
+        # ctx-bound cell is ~50 events, short enough that re-deriving ~35
+        # bindings per span call shows up. Mutable identities (log_active,
+        # the hoisted fill level / LRU clock) stay per-call.
+        ds = self.state
+        self._span_env = (
+            self._maybe_promote, self._compact, ds.host,
+            ds.host.move_to_end, ds.cache_res_mv, ds.cache_dirty_mv,
+            ds.cache_stamp_mv, ds.cache_sets, ds.cache_way,
+            ds.cache_n_sets, ds.cache_ways, ds.epoch_mv, ds.journal,
+            cfg.enable_promotion, self._counting,
+            ds.acc._mv if self._counting else None, cfg.promote_threshold,
+            cfg.host_dram_ns, base, cfg.cache_index_ns, cfg.ssd_dram_ns,
+            lat_log, lat_cache, cfg.ctx_switch_ns, cfg.ctx_threshold_ns,
+            ds.chan_bus, ds.chan_die, cfg.n_channels, cfg.flash.read_ns,
+            cfg.flash.program_ns,
+            TRANSFER_NS + cfg.flash.read_ns / DIES_PER_CHANNEL,
+            TRANSFER_NS + cfg.flash.program_ns / DIES_PER_CHANNEL,
+            self.channels.gc, ds.ftl_total,
+            max(int(ds.ftl_total * (1.0 - cfg.gc_threshold)), 1),
+            cfg.max_outstanding, cfg.enable_ctx_switch,
+            memoryview(ds.log_bits) if cfg.enable_write_log else None,
+            ds.log_cap,
+        )
 
     def _columns(self, th: Thread):
         cols = self._cols.get(th.tid)
@@ -356,9 +251,10 @@ def _classify_positions(m: BatchedMachine, cfg: SimConfig, pg, ln, wr):
     ordering it observes."""
     if cfg.dram_only:
         return wr.astype(np.int8)
+    ds = m.state
     k = pg.shape[0]
-    hostm = m.host.arr[pg]
-    cachem = m.cache.arr[pg]
+    hostm = ds.host.arr[pg]
+    cachem = ds.cache_res[pg]
     if m.log is None:
         return np.where(
             hostm, wr.astype(np.int8),
@@ -366,7 +262,7 @@ def _classify_positions(m: BatchedMachine, cfg: SimConfig, pg, ln, wr):
                      np.where(wr, np.int8(6), np.int8(3)),
                      np.int8(7)),
         ).astype(np.int8)
-    linem = (m.log.bits[pg] >> ln.astype(np.uint64)) & np.uint64(1) != 0
+    linem = (ds.log_bits[pg] >> ln.astype(np.uint64)) & np.uint64(1) != 0
     new = np.zeros(k, bool)
     logged = linem
     wmask = wr & ~hostm
@@ -406,7 +302,7 @@ def _refresh_cache(m: BatchedMachine, cfg: SimConfig, th: Thread,
                                         th.write[i:r])
     cc.lo = i
     cc.hi = r
-    cc.stamp = m.epoch_clock
+    cc.stamp = m.state.epoch_clock
     CACHE_STATS["classified"] += r - i
 
 
@@ -418,12 +314,13 @@ def _log_overlay(m: BatchedMachine, th: Thread, i: int, b: int,
     that could corrupt bulk application is a cache-read-hit whose line is
     now logged (3 -> 2: the reference checks the log before the cache).
     Stale NEW-pair writes are absorbed by the dup-tolerant bulk append,
-    and a read-miss that became a log hit (7) stays a boundary that
-    serve() resolves exactly."""
+    and a read-miss that became a log hit (7) stays a boundary that the
+    transcribed slow path resolves exactly."""
     fc = codes[:b]
     aff = np.flatnonzero(fc == 3)
     if aff.size:
-        linem = (m.log.bits[pg[aff]] >> ln[aff].astype(np.uint64)) \
+        bits = m.state.log_bits
+        linem = (bits[pg[aff]] >> ln[aff].astype(np.uint64)) \
             & np.uint64(1) != 0
         if linem.any():
             fc[aff[linem]] = 2
@@ -440,11 +337,11 @@ def _next_boundary(m: BatchedMachine, cfg: SimConfig, pg, fc) -> int:
         if b == 0:
             return 0
         fc = fc[:b]
-    log = m.log
-    if log is not None:
+    ds = m.state
+    if m.log is not None:
         # each NEW-pair write (code 4) adds one entry; only worth the exact
         # scan when the active buffer could conceivably fill in this chunk
-        headroom = log.cap - log.active_n
+        headroom = ds.log_cap - ds.log_active_n
         if headroom <= b:
             lvl = np.cumsum(fc == np.int8(4))
             if int(lvl[-1]) >= headroom:
@@ -457,10 +354,10 @@ def _next_boundary(m: BatchedMachine, cfg: SimConfig, pg, fc) -> int:
         cidx = np.flatnonzero(counted)
         if cidx.size:
             cp = pg[cidx]
-            acc_cp = m.acc_count.arr[cp]
+            acc_cp = ds.acc.arr[cp]
             # promotion needs a cache-resident page whose counter crosses
             # the threshold; cheap prescreen before the exact ranking
-            resident = m.cache.arr[cp]
+            resident = ds.cache_res[cp]
             maybe = resident & (acc_cp + cidx.size >= cfg.promote_threshold)
             if maybe.any():
                 order = np.argsort(cp, kind="stable")
@@ -484,6 +381,7 @@ def _apply_prefix(m: BatchedMachine, cfg: SimConfig, th: Thread,
     """Retire events [i, i+b) of the thread's trace in bulk. All are
     state-stable under the snapshot; pg/ln/codes are chunk-local views."""
     st = m.stats
+    ds = m.state
     fc = codes[:b]
     cnt = np.bincount(fc, minlength=8).tolist()
     n_hr, n_hw, n_log, n_cr, n_w4, n_w5, n_cw = cnt[:7]
@@ -520,27 +418,96 @@ def _apply_prefix(m: BatchedMachine, cfg: SimConfig, th: Thread,
     # lazy-but-exact state application
     fpg = pg[:b]
     if nh:
-        move = m.host.move_to_end
+        move = ds.host.move_to_end
         hpg = fpg if nh == b else fpg[hostm]
         for p in _last_occurrence_order(hpg):
             move(p)
-    if n_cr or n_cw:  # cache LRU (read hits + Base-CSSD write hits)
+    if n_cr or n_cw:  # cache LRU (read hits + Base-CSSD write hits): the
+        # stamp scatter IS the reference's per-event move-to-end sequence
         touch = fc == 3 if not n_cw else (fc == 3) | (fc == 6)
-        m.cache.touch_many(_last_occurrence_order(fpg[touch]))
+        m.cache.bulk_touch(fpg[touch])
     if n_cw:
-        mark = m.cache.mark_dirty
-        for p in set(fpg[fc == 6].tolist()):
-            mark(p)
+        ds.cache_dirty[fpg[fc == 6]] = True  # all code-6 pages are resident
     if n_w4:
         wm = fc == 4
         m.log.bulk_append_new(fpg[wm], ln[:b][wm])
     if m._counting and nh != b:
         cpg = fpg if nh == 0 else fpg[~hostm]
         if cpg.size > 1024:  # bincount amortizes its page_space allocation
-            m.acc_count.arr += np.bincount(cpg, minlength=m.page_space)
+            ds.acc.arr += np.bincount(cpg, minlength=m.page_space)
         else:
-            np.add.at(m.acc_count.arr, cpg, 1)
+            np.add.at(ds.acc.arr, cpg, 1)
     return t
+
+
+def _insert_miss(ds, st, p, dirty, t, cclk, csets, cway, n_sets, ways, cres,
+                 cdirty, cstamp, epoch_mv, journal, chan_bus, chan_die,
+                 n_ch, t_prog, wr_busy, channels_gc, ftl_total, ftl_reclaim):
+    """Inlined DataCache.insert (page known non-resident) + dirty-victim
+    write-back (Machine._handle_evict: Channels.write + Ftl.on_flash_write,
+    GC included) over the shared state — the exact operation order and
+    float expressions of the methods it replaces, minus their dispatch.
+    ``cclk`` is the caller's hoisted LRU clock; returns its new value.
+
+    KEEP IN SYNC: the no-log span's flash-read-miss block repeats this
+    body verbatim (dirty=False) — at that site, the hottest miss path in
+    the ctx-bound cells, even this function's call overhead was measurable.
+    Any change here must be mirrored there; the engine parity suites
+    (test_engine.py / test_engine_cache.py) catch a missed mirror as a
+    stat divergence on ctx/no-log configurations."""
+    row = csets[p % n_sets]
+    vw = 0
+    vp = -1
+    vs = None
+    for w2 in range(ways):
+        q = row[w2]
+        if q < 0:  # free slot: no eviction needed
+            vw = w2
+            vp = -1
+            break
+        sq = cstamp[q]
+        if vs is None or sq < vs:
+            vs = sq
+            vw = w2
+            vp = q
+    ec = ds.epoch_clock
+    ev_dirty = False
+    if vp >= 0:
+        ev_dirty = cdirty[vp]
+        cres[vp] = False
+        cway[vp] = -1
+        ec += 1
+        epoch_mv[vp] = ec
+        journal.append(vp)
+    row[vw] = p
+    cway[p] = vw
+    cres[p] = True
+    cdirty[p] = dirty
+    cclk += 1
+    cstamp[p] = cclk
+    ec += 1
+    epoch_mv[p] = ec
+    journal.append(p)
+    ds.epoch_clock = ec
+    if ev_dirty:
+        # dirty write-back: inlined Channels.write + Ftl.on_flash_write
+        ch = (vp * 1103515245 + 12345) % n_ch
+        die = chan_die[ch]
+        dd = (vp // n_ch) % DIES_PER_CHANNEL
+        bv = chan_bus[ch]
+        xfer = (t if t > bv else bv) + TRANSFER_NS
+        chan_bus[ch] = xfer
+        dv = die[dd]
+        done = (xfer if xfer > dv else dv) + t_prog
+        die[dd] = done
+        ds.chan_busy_ns += wr_busy
+        ds.flash_writes += 1
+        st.flash_write_pages += 1
+        ds.ftl_used += 1
+        if ds.ftl_used >= ftl_total:
+            channels_gc(t)
+            ds.ftl_used -= ftl_reclaim
+    return cclk
 
 
 def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
@@ -549,52 +516,43 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
 
     Trace columns are native Python lists (no per-event NumPy scalar
     boxing). Every serve() case is transcribed with identical operation
-    order — including misses, write-log fills (direct _compact call) and
+    order — including misses, write-log fills (direct _compact call),
     promotions (direct _maybe_promote call, which also keeps stochastic
     tpp/astriflash policies exact: the RNG stream is consumed in the same
-    per-event order as the reference). Only the coordinated-context-switch
-    read miss still goes through serve(), whose trigger/park logic ends
-    the quantum anyway. Returns (i, t, blocked).
+    per-event order as the reference) and the coordinated-context-switch
+    read miss (estimate -> read -> fill -> park). State is probed through
+    the shared DeviceState memoryviews, and the entire miss machinery —
+    channel/die timing, cache fill + victim eviction, dirty write-back,
+    FTL/GC accounting, epoch bumps — is inlined over the same shared
+    arrays (~3 us of call dispatch per miss otherwise, and misses are up
+    to ~20% of all events in write-storm phases). Returns (i, t, blocked).
     """
     pages, lines, writes, gaps = m._columns(th)
     st = m.stats
-    serve = m.serve
-    maybe_promote = m._maybe_promote
-    compact = m._compact
-    host = m.host
-    move_host = host.move_to_end
-    cache = m.cache
-    csets = cache.sets
-    nsets = cache.n_sets
-    log = m.log
-    if log is not None:
-        log_active = log.active
-        log_cap = log.cap
-        # memoryview: python-int scalar get/set is ~4x cheaper than NumPy
-        # scalar indexing; writes go through to the shared array
-        logbits = memoryview(log.bits)
-        an = log.active_n  # hoisted; written back around compactions/serve
-    promoting = cfg.enable_promotion
-    skybyte_count = m._counting  # skybyte policy: cheap threshold precheck
-    acc = memoryview(m.acc_count.arr) if skybyte_count else None
-    promo_thr = cfg.promote_threshold
-    lat_host = cfg.host_dram_ns
-    base = cfg.cxl_protocol_ns
-    cache_idx = cfg.cache_index_ns
-    dram = cfg.ssd_dram_ns
-    lat_log = base + cfg.log_index_ns + dram
-    lat_cache = base + cache_idx + dram
-    ctx_ns = cfg.ctx_switch_ns
-    # miss machinery (write-allocate fills, eviction writebacks): misses
-    # mutate cache membership but are O(1) dict/list/channel ops — in
-    # write-heavy workloads they are ~20% of all events, too frequent to
-    # pay full serve() dispatch for
-    channels_read = m.channels.read
-    channels_write = m.channels.write
-    on_flash_write = m.ftl.on_flash_write
-    cache_insert = cache.insert
-    max_out = cfg.max_outstanding
-    ctx_on = cfg.enable_ctx_switch
+    ds = m.state
+    # invariant locals (memoryviews over the shared state arrays, latency
+    # constants, inlined-flash-timing constants) come prepacked — see
+    # BatchedMachine._span_env. Python-int scalar get/set on a memoryview
+    # is ~4x cheaper than NumPy scalar indexing; writes go through to the
+    # same arrays the vector path gathers.
+    (maybe_promote, compact, host, move_host, cres, cdirty, cstamp, csets,
+     cway, n_sets, ways, epoch_mv, journal, promoting, skybyte_count, acc,
+     promo_thr, lat_host, base, cache_idx, dram, lat_log, lat_cache,
+     ctx_ns, ctx_thr, chan_bus, chan_die, n_ch, t_read, t_prog, rd_busy,
+     wr_busy, channels_gc, ftl_total, ftl_reclaim, max_out, ctx_on,
+     logbits, log_cap) = m._span_env
+    log_on = logbits is not None
+    if log_on:
+        log_active = ds.log_active
+        an = ds.log_active_n  # hoisted; written back around compactions
+    # the host tier only ever gains pages through _maybe_promote: with
+    # promotion off and the tier empty it stays empty for the whole span,
+    # so the per-event membership probe can be skipped outright
+    check_host = promoting or len(host) > 0
+    # LRU clock hoisted to a local; synced back around every call that can
+    # reach DataCache.lookup/insert through the policy layer
+    # (_maybe_promote) and on exit
+    cclk = ds.cache_clock
     # local accumulators: same sequential add order as _record, flushed on exit
     host_r = host_w = hit_log_n = hit_cache_n = miss_n = ssd_w_n = 0
     slow_n = bnd_n = k = 0
@@ -603,11 +561,237 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
     lat_hit_acc = st.lat_hit
     lat_miss_acc = st.lat_miss
     blocked = False
+    if not log_on:
+        # ================= specialized no-write-log loop =================
+        # (Base-CSSD / -C / -P / -CP): the line column is never consumed,
+        # one membership probe serves read AND write hits, and the read
+        # miss — the quantum-ending event of the ctx-bound cells — runs
+        # with its fill/evict/write-back machinery fully inlined.
+        for p, w, g in zip(pages[i:stop], writes[i:stop], gaps[i:stop]):
+            t += g
+            k += 1
+            if check_host and p in host:
+                move_host(p)
+                if w:
+                    host_w += 1
+                else:
+                    host_r += 1
+                lat_sum += lat_host
+                lat_host_acc += lat_host
+                t += lat_host
+                continue
+            if cres[p]:
+                cclk += 1
+                cstamp[p] = cclk  # LRU touch (serve's lookup)
+                if w:
+                    cdirty[p] = True  # mark_dirty
+                    ssd_w_n += 1
+                else:
+                    hit_cache_n += 1
+                if promoting:
+                    if skybyte_count:
+                        c = acc[p] + 1
+                        if c >= promo_thr:  # resident by construction
+                            ds.cache_clock = cclk
+                            maybe_promote(p, t)
+                            cclk = ds.cache_clock
+                            bnd_n += 1
+                        else:
+                            acc[p] = c
+                    else:  # tpp / astriflash: exact per-event RNG order
+                        ds.cache_clock = cclk
+                        maybe_promote(p, t)
+                        cclk = ds.cache_clock
+                lat_sum += lat_cache
+                lat_hit_acc += lat_cache
+                t += lat_cache
+                continue
+            if w:
+                # Base-CSSD write miss: posted store, background page
+                # fetch in a write slot (transcribed from serve())
+                stall = 0.0
+                if len(wslots) >= max_out:
+                    oldest = min(wslots)
+                    wslots.remove(oldest)
+                    if oldest > t:
+                        stall = oldest - t
+                # inlined Channels.read at now = t + stall
+                ch = (p * 1103515245 + 12345) % n_ch
+                die = chan_die[ch]
+                dd = (p // n_ch) % DIES_PER_CHANNEL
+                now2 = t + stall
+                dv = die[dd]
+                sensed = (dv if dv > now2 else now2) + t_read
+                bv = chan_bus[ch]
+                done = (sensed if sensed > bv else bv) + TRANSFER_NS
+                die[dd] = sensed
+                chan_bus[ch] = done
+                ds.chan_busy_ns += rd_busy
+                ds.flash_reads += 1
+                wslots.append(done)
+                cclk = _insert_miss(ds, st, p, True, t, cclk, csets,
+                                    cway, n_sets, ways, cres, cdirty,
+                                    cstamp, epoch_mv, journal, chan_bus,
+                                    chan_die, n_ch, t_prog, wr_busy,
+                                    channels_gc, ftl_total, ftl_reclaim)
+                bnd_n += 1
+                if promoting:
+                    if skybyte_count:
+                        c = acc[p] + 1
+                        if c >= promo_thr:  # just inserted -> resident
+                            ds.cache_clock = cclk
+                            maybe_promote(p, t)
+                            cclk = ds.cache_clock
+                            bnd_n += 1
+                        else:
+                            acc[p] = c
+                    else:
+                        ds.cache_clock = cclk
+                        maybe_promote(p, t)
+                        cclk = ds.cache_clock
+                ssd_w_n += 1
+                lat = stall + base + cache_idx + dram
+                lat_sum += lat
+                lat_hit_acc += lat
+                t += lat
+                continue
+            # ---- flash read miss (transcribed from serve(); when the
+            # coordinated context switch is on, Algorithm 1's estimator
+            # decides between parking the thread and serving inline) ----
+            ch = (p * 1103515245 + 12345) % n_ch
+            die = chan_die[ch]
+            dd = (p // n_ch) % DIES_PER_CHANNEL
+            dv = die[dd]
+            bv = chan_bus[ch]
+            if ctx_on:  # inlined Channels.estimate (pre-issue state)
+                dw = dv - t
+                bw = bv - t
+                wait = dw if dw > bw else bw
+                est = (wait if wait > 0.0 else 0.0) + t_read
+            # inlined Channels.read
+            sensed = (dv if dv > t else t) + t_read
+            done = (sensed if sensed > bv else bv) + TRANSFER_NS
+            die[dd] = sensed
+            chan_bus[ch] = done
+            ds.chan_busy_ns += rd_busy
+            ds.flash_reads += 1
+            # inlined DataCache.insert(p, False) + victim write-back:
+            # verbatim body of _insert_miss (KEEP IN SYNC with it — this
+            # is the one site hot enough to shed the call overhead)
+            row = csets[p % n_sets]
+            vw = 0
+            vp = -1
+            vs = None
+            for w2 in range(ways):
+                q = row[w2]
+                if q < 0:  # free slot: no eviction needed
+                    vw = w2
+                    vp = -1
+                    break
+                sq = cstamp[q]
+                if vs is None or sq < vs:
+                    vs = sq
+                    vw = w2
+                    vp = q
+            ec = ds.epoch_clock
+            ev_dirty = False
+            if vp >= 0:
+                ev_dirty = cdirty[vp]
+                cres[vp] = False
+                cway[vp] = -1
+                ec += 1
+                epoch_mv[vp] = ec
+                journal.append(vp)
+            row[vw] = p
+            cway[p] = vw
+            cres[p] = True
+            cdirty[p] = False
+            cclk += 1
+            cstamp[p] = cclk
+            ec += 1
+            epoch_mv[p] = ec
+            journal.append(p)
+            ds.epoch_clock = ec
+            if ev_dirty:
+                # dirty write-back: inlined Channels.write + Ftl
+                ch = (vp * 1103515245 + 12345) % n_ch
+                die = chan_die[ch]
+                dd = (vp // n_ch) % DIES_PER_CHANNEL
+                bv = chan_bus[ch]
+                xfer = (t if t > bv else bv) + TRANSFER_NS
+                chan_bus[ch] = xfer
+                dv = die[dd]
+                wb_done = (xfer if xfer > dv else dv) + t_prog
+                die[dd] = wb_done
+                ds.chan_busy_ns += wr_busy
+                ds.flash_writes += 1
+                st.flash_write_pages += 1
+                ds.ftl_used += 1
+                if ds.ftl_used >= ftl_total:
+                    channels_gc(t)
+                    ds.ftl_used -= ftl_reclaim
+            if ctx_on and est > ctx_thr:
+                st.ctx_switches += 1
+                if promoting:
+                    if skybyte_count:
+                        c = acc[p] + 1
+                        if c >= promo_thr:  # just inserted -> resident
+                            ds.cache_clock = cclk
+                            maybe_promote(p, t)
+                            cclk = ds.cache_clock
+                        else:
+                            acc[p] = c
+                    else:
+                        ds.cache_clock = cclk
+                        maybe_promote(p, t)
+                        cclk = ds.cache_clock
+                slow_n += 1
+                th.ready = done
+                th.replay = True
+                t += ctx_ns
+                k -= 1  # squashed access: replayed after wakeup
+                blocked = True
+                break
+            if promoting:
+                if skybyte_count:
+                    c = acc[p] + 1
+                    if c >= promo_thr:  # just inserted -> resident
+                        ds.cache_clock = cclk
+                        maybe_promote(p, t)
+                        cclk = ds.cache_clock
+                        bnd_n += 1
+                    else:
+                        acc[p] = c
+                else:
+                    ds.cache_clock = cclk
+                    maybe_promote(p, t)
+                    cclk = ds.cache_clock
+            bnd_n += 1
+            lat = (done - t) + base + cache_idx + dram
+            miss_n += 1
+            lat_sum += lat
+            lat_miss_acc += lat
+            t += lat
+        ds.cache_clock = cclk
+        if k:
+            m.runlen += 0.25 * (k / (slow_n + bnd_n + 1) - m.runlen)
+        st.n += k
+        st.host_r += host_r
+        st.host_w += host_w
+        st.hit_cache += hit_cache_n
+        st.miss_flash += miss_n
+        st.ssd_w += ssd_w_n
+        st.lat_sum = lat_sum
+        st.lat_host = lat_host_acc
+        st.lat_hit = lat_hit_acc
+        st.lat_miss = lat_miss_acc
+        return i + k, t, blocked
+    # ==================== write-log loop (-W variants) ====================
     for p, l, w, g in zip(pages[i:stop], lines[i:stop], writes[i:stop],
                           gaps[i:stop]):
         t += g
         k += 1
-        if p in host:
+        if check_host and p in host:
             move_host(p)
             if w:
                 host_w += 1
@@ -618,152 +802,155 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             t += lat_host
             continue
         if w:
-            if log is not None:
-                # cacheline write log append (serve(): append -> compact
-                # if full -> promote)
-                e = log_active.get(p)
-                if e is None or l not in e:
-                    if e is None:
-                        e = log_active[p] = {}
-                    e[l] = True
-                    # no epoch bump: cached codes absorb new lines through
-                    # the per-chunk log overlay, not page repair
-                    logbits[p] = logbits[p] | (1 << l)
-                    an += 1
-                    if an >= log_cap:  # filled: drain the old buffer
-                        log.active_n = an
-                        compact(t)
-                        log_active = log.active
-                        an = log.active_n
-                        bnd_n += 1
-                lat = lat_log
-            else:
-                s = csets[p % nsets]
-                d = s.get(p)
-                if d is not None:
-                    s.move_to_end(p)
-                    if not d:
-                        s[p] = True  # mark_dirty
-                    lat = lat_cache
-                else:
-                    # Base-CSSD write miss: posted store, background page
-                    # fetch in a write slot (transcribed from serve())
-                    stall = 0.0
-                    if len(wslots) >= max_out:
-                        oldest = min(wslots)
-                        wslots.remove(oldest)
-                        if oldest > t:
-                            stall = oldest - t
-                    wslots.append(channels_read(p, t + stall))
-                    ev = cache_insert(p, True)
-                    if ev is not None and ev[1]:
-                        channels_write(ev[0], t)
-                        on_flash_write(t)
-                        st.flash_write_pages += 1
+            # cacheline write log append (serve(): append -> compact
+            # if full -> promote)
+            e = log_active.get(p)
+            if e is None or l not in e:
+                if e is None:
+                    e = log_active[p] = {}
+                e[l] = True
+                # no epoch bump: cached codes absorb new lines through
+                # the per-chunk log overlay, not page repair
+                logbits[p] = logbits[p] | (1 << l)
+                an += 1
+                if an >= log_cap:  # filled: drain the old buffer
+                    ds.log_active_n = an
+                    compact(t)
+                    log_active = ds.log_active
+                    an = ds.log_active_n
                     bnd_n += 1
-                    lat = stall + base + cache_idx + dram
             if promoting:
                 if skybyte_count:
                     c = acc[p] + 1
-                    if c >= promo_thr and csets[p % nsets].get(p) is not None:
+                    if c >= promo_thr and cres[p]:
+                        ds.cache_clock = cclk
                         maybe_promote(p, t)
+                        cclk = ds.cache_clock
                         bnd_n += 1
                     else:
                         acc[p] = c
                 else:  # tpp / astriflash: exact per-event RNG order
+                    ds.cache_clock = cclk
                     maybe_promote(p, t)
+                    cclk = ds.cache_clock
             ssd_w_n += 1
-            lat_sum += lat
-            lat_hit_acc += lat
-            t += lat
+            lat_sum += lat_log
+            lat_hit_acc += lat_log
+            t += lat_log
             continue
         # ---- read ----
-        if log is not None:
-            e = log_active.get(p)
-            if e is not None and l in e:
-                if promoting:
-                    if skybyte_count:
-                        c = acc[p] + 1
-                        if c >= promo_thr and csets[p % nsets].get(p) is not None:
-                            maybe_promote(p, t)
-                            bnd_n += 1
-                        else:
-                            acc[p] = c
-                    else:
-                        maybe_promote(p, t)
-                hit_log_n += 1
-                lat_sum += lat_log
-                lat_hit_acc += lat_log
-                t += lat_log
-                continue
-        s = csets[p % nsets]
-        d = s.get(p)
-        if d is not None:
-            s.move_to_end(p)
+        e = log_active.get(p)
+        if e is not None and l in e:
             if promoting:
                 if skybyte_count:
                     c = acc[p] + 1
-                    if c >= promo_thr:  # resident -> promotion fires
+                    if c >= promo_thr and cres[p]:
+                        ds.cache_clock = cclk
                         maybe_promote(p, t)
+                        cclk = ds.cache_clock
                         bnd_n += 1
                     else:
                         acc[p] = c
                 else:
+                    ds.cache_clock = cclk
                     maybe_promote(p, t)
+                    cclk = ds.cache_clock
+            hit_log_n += 1
+            lat_sum += lat_log
+            lat_hit_acc += lat_log
+            t += lat_log
+            continue
+        if cres[p]:
+            cclk += 1
+            cstamp[p] = cclk  # LRU touch
+            if promoting:
+                if skybyte_count:
+                    c = acc[p] + 1
+                    if c >= promo_thr:  # resident -> promotion fires
+                        ds.cache_clock = cclk
+                        maybe_promote(p, t)
+                        cclk = ds.cache_clock
+                        bnd_n += 1
+                    else:
+                        acc[p] = c
+                else:
+                    ds.cache_clock = cclk
+                    maybe_promote(p, t)
+                    cclk = ds.cache_clock
             hit_cache_n += 1
             lat_sum += lat_cache
             lat_hit_acc += lat_cache
             t += lat_cache
             continue
-        if not ctx_on:
-            # flash read miss (transcribed from serve())
-            done = channels_read(p, t)
-            ev = cache_insert(p, False)
-            if ev is not None and ev[1]:
-                channels_write(ev[0], t)
-                on_flash_write(t)
-                st.flash_write_pages += 1
+        # ---- flash read miss (transcribed from serve(); when the
+        # coordinated context switch is on, Algorithm 1's estimator decides
+        # between parking the thread and serving the miss inline) ----
+        ch = (p * 1103515245 + 12345) % n_ch
+        die = chan_die[ch]
+        dd = (p // n_ch) % DIES_PER_CHANNEL
+        dv = die[dd]
+        bv = chan_bus[ch]
+        if ctx_on:  # inlined Channels.estimate (reads pre-issue state)
+            dw = dv - t
+            bw = bv - t
+            wait = dw if dw > bw else bw
+            est = (wait if wait > 0.0 else 0.0) + t_read
+        # inlined Channels.read
+        sensed = (dv if dv > t else t) + t_read
+        done = (sensed if sensed > bv else bv) + TRANSFER_NS
+        die[dd] = sensed
+        chan_bus[ch] = done
+        ds.chan_busy_ns += rd_busy
+        ds.flash_reads += 1
+        cclk = _insert_miss(ds, st, p, False, t, cclk, csets, cway, n_sets,
+                            ways, cres, cdirty, cstamp, epoch_mv, journal,
+                            chan_bus, chan_die, n_ch, t_prog, wr_busy,
+                            channels_gc, ftl_total, ftl_reclaim)
+        if ctx_on and est > ctx_thr:
+            st.ctx_switches += 1
             if promoting:
                 if skybyte_count:
                     c = acc[p] + 1
                     if c >= promo_thr:  # just inserted -> resident
+                        ds.cache_clock = cclk
                         maybe_promote(p, t)
-                        bnd_n += 1
+                        cclk = ds.cache_clock
                     else:
                         acc[p] = c
                 else:
+                    ds.cache_clock = cclk
                     maybe_promote(p, t)
-            bnd_n += 1
-            lat = (done - t) + base + cache_idx + dram
-            miss_n += 1
-            lat_sum += lat
-            lat_miss_acc += lat
-            t += lat
-            continue
-        # ---- coordinated-context-switch read miss: serve() decides the
-        # trigger and parks the thread (gap already charged) ----
-        slow_n += 1
-        if log is not None:
-            log.active_n = an
-        lat, blocked_until, scls = serve(p, l, w, t, wslots)
-        if log is not None:
-            log_active = log.active  # compaction inside serve swaps buffers
-            an = log.active_n
-        if blocked_until is not None:
-            th.ready = blocked_until
+                    cclk = ds.cache_clock
+            slow_n += 1
+            th.ready = done
             th.replay = True
             t += ctx_ns
             k -= 1  # squashed access: replayed later, not retired now
             blocked = True
             break
-        # host/log/cache were checked above, so this can only be a flash
-        # miss the estimator chose not to switch on
-        t += lat
-        lat_sum += lat
+        if promoting:
+            if skybyte_count:
+                c = acc[p] + 1
+                if c >= promo_thr:  # just inserted -> resident
+                    ds.cache_clock = cclk
+                    maybe_promote(p, t)
+                    cclk = ds.cache_clock
+                    bnd_n += 1
+                else:
+                    acc[p] = c
+            else:
+                ds.cache_clock = cclk
+                maybe_promote(p, t)
+                cclk = ds.cache_clock
+        bnd_n += 1
+        lat = (done - t) + base + cache_idx + dram
         miss_n += 1
+        lat_sum += lat
         lat_miss_acc += lat
-    if log is not None:
-        log.active_n = an
+        t += lat
+    ds.cache_clock = cclk
+    if log_on:
+        ds.log_active_n = an
     if k:
         m.runlen += 0.25 * (k / (slow_n + bnd_n + 1) - m.runlen)
     st.n += k
@@ -785,12 +972,12 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
 def _classify_few(m: BatchedMachine, th: Thread, cc: _ClsCache,
                   pos) -> None:
     """Scalar-path re-classification of a few ascending trace positions
-    (same semantics as _classify_positions, via the dense mirrors)."""
+    (same semantics as _classify_positions, via the state memoryviews)."""
     pages, lines, writes, _ = m._columns(th)
-    hostv = m.host._mv
-    cachev = m.cache._mv
-    log = m.log
-    bits = memoryview(log.bits) if log is not None else None
+    ds = m.state
+    hostv = ds.host._mv
+    cachev = ds.cache_res_mv
+    bits = memoryview(ds.log_bits) if m.log is not None else None
     codes_mv = memoryview(cc.codes)
     seen = set()
     for x in pos.tolist():
@@ -819,7 +1006,7 @@ def _classify_few(m: BatchedMachine, th: Thread, cc: _ClsCache,
 
 def _fold_boundary(m: BatchedMachine, cfg: SimConfig, th: Thread,
                    cc: _ClsCache, i: int) -> None:
-    """Fold the pages mutated by the boundary event just executed (machine
+    """Fold the pages mutated by the boundary event just executed (state
     journal) back into the live cached range, then advance the stamp.
 
     Advancing the stamp here is sound because quanta are serial: between
@@ -828,7 +1015,8 @@ def _fold_boundary(m: BatchedMachine, cfg: SimConfig, th: Thread,
     Folding in place keeps the common ctx-switch cycle — miss on page p,
     insert p, evict q, park — from failing the next validation: p is
     usually re-accessed immediately (spatial runs)."""
-    jl = m.journal
+    ds = m.state
+    jl = ds.journal
     if jl:
         if len(jl) <= 24:
             CACHE_STATS["folds"] += 1
@@ -849,7 +1037,7 @@ def _fold_boundary(m: BatchedMachine, cfg: SimConfig, th: Thread,
         else:  # flood (compaction drained the log): reclassify wholesale
             _refresh_cache(m, cfg, th, cc, i, m.chunk)
         jl.clear()
-    cc.stamp = m.epoch_clock
+    cc.stamp = ds.epoch_clock
 
 
 def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
@@ -858,8 +1046,20 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
     identical to simulator._reference_quantum."""
     i, n = th.i, th.n
     if th.replay:
-        i, t = _replay_prologue(m, cfg, th, t)
-    m.journal.clear()  # only this quantum's boundary bumps matter
+        # inlined _replay_prologue (§III-A 4): the replayed access is
+        # charged as an SSD DRAM hit; identical accounting order
+        th.replay = False
+        st = m.stats
+        lat = m._lat_cache
+        t += lat
+        st.n += 1
+        st.lat_sum += lat
+        st.hit_cache += 1
+        st.lat_hit += lat
+        st.replays += 1
+        i += 1
+    ds = m.state
+    ds.journal.clear()  # only this quantum's boundary bumps matter
     blocked = False
     cc = None
     min_run = m._min_run
@@ -870,10 +1070,18 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             # pre-classified vector pass (repairing the cache at every
             # boundary would dominate); the span reports observed run
             # lengths back into the EWMA so the engine re-vectorizes when
-            # runs lengthen again
+            # runs lengthen again. With coordinated context switches on,
+            # quanta end after ~1/miss-rate events — size the span window
+            # to the observed run length so the four trace-column slices
+            # copy what the quantum will consume, not _SPAN events of it
+            # (the while loop re-enters if the thread outlives the window).
             cc = None
+            lim = _SPAN
+            if cfg.enable_ctx_switch:
+                r = int(m.runlen)
+                lim = 4 * r + 64 if r < 240 else _SPAN
             i, t, blocked = _inline_span(m, cfg, th, t, wslots, i,
-                                         min(i + _SPAN, n))
+                                         min(i + lim, n))
             continue
         j = min(i + m.chunk, n)
         if use_cache:
@@ -891,13 +1099,13 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                     # changed membership since the stamp — usually not,
                     # so the whole quantum consumes cached codes as-is
                     CACHE_STATS["checks"] += 1
-                    if int(m.page_epoch[th.page[i:cc.hi]].max()) > cc.stamp:
+                    if int(ds.page_epoch[th.page[i:cc.hi]].max()) > cc.stamp:
                         CACHE_STATS["repairs"] += 1
                         _refresh_cache(m, cfg, th, cc, i, j - i)
                     else:
                         CACHE_STATS["clean"] += 1
-                cc.stamp = m.epoch_clock
-                m.journal.clear()
+                cc.stamp = ds.epoch_clock
+                ds.journal.clear()
             if j > cc.hi:  # chunk overruns the (validated) range
                 CACHE_STATS["builds"] += 1
                 _refresh_cache(m, cfg, th, cc, i, j - i)
@@ -916,19 +1124,21 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             i += b
         if b < pg.shape[0]:  # boundary inside the chunk
             m.runlen += 0.25 * (b - m.runlen)
-            # exact slow path for the state-changing event
+            # ---- transcribed slow path for the state-changing event.
+            # Every case replicates Machine.serve()'s operation order to
+            # the letter; serve() itself is never called. Classification
+            # proves host/cache membership (epoch-validated); only the
+            # append-monotone write log needs a live probe — a line may
+            # have arrived since classification. ----
             t = t + th.gap64[i]
+            kb = int(codes[b])
             pgb = int(pg[b])
             wrb = bool(th.write[i])
-            if cc is not None and not wrb and cfg.enable_ctx_switch \
-                    and codes[b] == 7:
-                # transcribed coordinated-ctx read-miss path (the hottest
-                # boundary by far): the epoch validation proves pgb is
-                # neither host- nor cache-resident, so only the
-                # (append-monotone) write log needs a live probe — the
-                # operation order below is serve()'s, to the letter
-                log = m.log
-                e = log.active.get(pgb) if log is not None else None
+            log_on = m.log is not None
+            if kb == 7 and not wrb:
+                # flash read miss per classification (host/cache
+                # non-resident)
+                e = ds.log_active.get(pgb) if log_on else None
                 if e is not None and int(ln[b]) in e:
                     # line arrived since classification: an exact log hit
                     m._maybe_promote(pgb, t)
@@ -937,11 +1147,14 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                     _record(m.stats, "hit_log", lat)
                     i += 1
                 else:
-                    est = m.channels.estimate(pgb, t)
+                    ctx_on = cfg.enable_ctx_switch
+                    if ctx_on:
+                        est = m.channels.estimate(pgb, t)
                     done = m.channels.read(pgb, t)
                     ev = m.cache.insert(pgb, False)
                     m._handle_evict(ev, t)
-                    if est > cfg.ctx_threshold_ns:
+                    if ctx_on and est > cfg.ctx_threshold_ns:
+                        # Algorithm 1 fires: park the thread (§III-A)
                         m.stats.ctx_switches += 1
                         m._maybe_promote(pgb, t)
                         th.ready = done
@@ -956,9 +1169,10 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                         t += lat
                         _record(m.stats, "miss_flash", lat)
                         i += 1
-            elif cc is not None and wrb and m.log is None and codes[b] == 7:
-                # transcribed Base-CSSD write miss (posted store, background
-                # page fetch in a write slot) — serve()'s order to the letter
+            elif kb == 7:
+                # Base-CSSD write miss (log off: all logged writes are
+                # codes 4/5): posted store, background page fetch in a
+                # write slot
                 stall = 0.0
                 if len(wslots) >= cfg.max_outstanding:
                     oldest = min(wslots)
@@ -974,18 +1188,41 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 t += lat
                 _record(m.stats, "ssd_w", lat)
                 i += 1
-            else:
-                lat, blocked_until, scls = m.serve(pgb, int(ln[b]), wrb,
-                                                   t, wslots)
-                if blocked_until is not None:
-                    th.ready = blocked_until
-                    th.replay = True
-                    t += cfg.ctx_switch_ns
-                    blocked = True
+            elif wrb:
+                if log_on:
+                    # logged write at a predicted boundary: the append may
+                    # fill the active buffer (compaction drain), and/or the
+                    # access may cross the promotion threshold
+                    full = m.log.append(pgb, int(ln[b]))
+                    if full:
+                        m._compact(t)
+                    m._maybe_promote(pgb, t)
+                    lat = m._lat_log
+                    _record(m.stats, "ssd_w", lat)
                 else:
-                    t += lat
-                    _record(m.stats, scls, lat)
-                    i += 1
+                    # cache write hit with a predicted promotion
+                    m.cache.lookup(pgb)  # LRU touch (serve's order)
+                    m.cache.mark_dirty(pgb)
+                    m._maybe_promote(pgb, t)
+                    lat = m._lat_cache
+                    _record(m.stats, "ssd_w", lat)
+                t += lat
+                i += 1
+            else:
+                # read hit (log or cache) with a predicted promotion; the
+                # log probe is live because appends don't bump epochs
+                e = ds.log_active.get(pgb) if log_on else None
+                if e is not None and int(ln[b]) in e:
+                    m._maybe_promote(pgb, t)
+                    lat = m._lat_log
+                    _record(m.stats, "hit_log", lat)
+                else:
+                    m.cache.lookup(pgb)  # LRU touch
+                    m._maybe_promote(pgb, t)
+                    lat = m._lat_cache
+                    _record(m.stats, "hit_cache", lat)
+                t += lat
+                i += 1
             if cc is not None:
                 _fold_boundary(m, cfg, th, cc, i)
             m.chunk = max(_CHUNK_FLOOR, min(_CHUNK_MAX, 2 * b + 32))

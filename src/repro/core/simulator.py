@@ -23,27 +23,35 @@ MacSim are confined to sub-100ns effects and documented in DESIGN.md):
                     (replayed) access is charged as an SSD DRAM hit, and
                     the squashed original is excluded from AMAT (§VI-D).
 
-Scheduling policies: RR / RANDOM / CFS (default, vruntime-based).
+Scheduling policies: RR / RANDOM / CFS (default, vruntime-based). The
+scheduler state is dense (per-thread ready/vruntime/last-sched arrays);
+candidate selection is one masked argmin per quantum, with done threads
+parked at +inf. Tie-breaking (first minimal thread index) and the RANDOM
+policy's RNG stream are identical to the historical object scan.
 
-Two replay engines share the scheduler (SimConfig.engine):
-  "reference" — the original pure-Python per-event loop (ground truth);
-  "batched"   — the vectorized fast path in engine.py, which resolves runs
-                of state-stable accesses with NumPy bulk passes and drops
-                to the exact per-event path at state-changing boundaries.
+Two replay engines share the scheduler AND one authoritative
+``DeviceState`` (SimConfig.engine):
+  "reference" — the original pure-Python per-event loop. Ground truth and
+                parity oracle: ``Machine.serve()`` exists for it alone.
+  "batched"   — the vectorized fast path in engine.py: resolves runs of
+                state-stable accesses with NumPy bulk passes over the
+                shared state arrays and executes every state-changing
+                boundary through its own exact transcription.
 Both produce identical Stats (see tests/test_engine.py).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 import os
 import random
-from collections import OrderedDict
-from operator import attrgetter
 from typing import Any, Dict, List, Tuple
 
 import numpy as np
 
 from repro.configs.base import SimConfig
+from repro.core.device_state import DeviceState
 from repro.core.ssd import Channels, DataCache, Ftl, WriteLog
 from repro.core.traces import gen_traces
 
@@ -73,7 +81,7 @@ class Stats:
 
 class Thread:
     __slots__ = ("tid", "page", "line", "write", "gap64", "i", "n",
-                 "ready", "vruntime", "last_sched", "running", "replay", "done")
+                 "ready", "replay", "done")
 
     def __init__(self, tid: int, trace: Dict):
         self.tid = tid
@@ -87,23 +95,31 @@ class Thread:
         self.i = 0
         self.n = len(self.page)
         self.ready = 0.0
-        self.vruntime = 0.0
-        self.last_sched = 0
-        self.running = False
         self.replay = False
         self.done = False
 
 
 class Machine:
-    def __init__(self, cfg: SimConfig, seed: int = 0):
+    """Policy layer over one DeviceState: promotion/demotion, compaction,
+    eviction write-back, and the per-event request oracle ``serve()``.
+
+    Both engines run on a Machine (the batched engine's BatchedMachine
+    subclass only adds classification-cache bookkeeping); all device state
+    lives in ``self.state`` and is shared — by construction — between the
+    reference loop and the batched fast path."""
+
+    def __init__(self, cfg: SimConfig, seed: int = 0, page_space: int = 0):
         self.cfg = cfg
-        self.channels = Channels(cfg)
-        self.ftl = Ftl(cfg, self.channels)
-        self.cache = DataCache(cfg)
-        self.log = WriteLog(cfg) if cfg.enable_write_log else None
-        self.host: "OrderedDict[int, bool]" = OrderedDict()
+        if page_space <= 0:
+            page_space = max(cfg.n_flash_pages, 1)
+        self.state = DeviceState(cfg, page_space)
+        self.channels = Channels(cfg, self.state)
+        self.ftl = Ftl(cfg, self.state, self.channels)
+        self.cache = DataCache(cfg, self.state)
+        self.log = WriteLog(cfg, self.state) if cfg.enable_write_log else None
+        self.host = self.state.host
         self.host_cap = max(cfg.host_pages, 1)
-        self.acc_count: Dict[int, int] = {}
+        self.acc_count = self.state.acc
         self.stats = Stats()
         self.rng = random.Random(seed)
 
@@ -158,6 +174,7 @@ class Machine:
         §III-B) rather than monopolizing the flash channels; foreground
         reads must keep making progress between compaction programs."""
         log = self.log
+        st = self.state
         old = log.swap_for_compaction()
         for page, lines in old.items():
             if self.cache.lookup(page, touch=False) is None:
@@ -165,14 +182,16 @@ class Machine:
             self.channels.write(page, now)
             self.ftl.on_flash_write(now)
             self.stats.flash_write_pages += 1
-            log.flushed_pages += 1
-            log.flushed_lines += len(lines)
+            st.log_flushed_pages += 1
+            st.log_flushed_lines += len(lines)
         log.finish_compaction()
 
     # ---- request service ----
     def serve(self, page: int, line: int, is_write: bool, now: float, wslots):
         """Returns (latency_ns, blocked_until or None, amat_class).
 
+        The reference engine's per-event oracle (the batched engine
+        transcribes every case into its own paths and never calls this).
         blocked_until is set when the coordinated context switch fires:
         the thread parks until flash completion and replays the access.
         ``wslots``: per-core in-flight posted-write completion times (models
@@ -233,7 +252,7 @@ class Machine:
             est = self.channels.estimate(page, now)
             if est > cfg.ctx_threshold_ns:
                 done = self.channels.read(page, now)
-                ev = self.cache.insert(page, False if self.log is not None else False)
+                ev = self.cache.insert(page, False)
                 self._handle_evict(ev, now)
                 st.ctx_switches += 1
                 self._maybe_promote(page, now)
@@ -247,10 +266,6 @@ class Machine:
 
 
 _CLS_LAT = ("host_r", "host_w", "hit_log", "hit_cache", "miss_flash", "ssd_w")
-# C-level min() keys for the scheduler (same first-minimum tie-break as the
-# equivalent lambdas, ~3x cheaper per candidate scan)
-_BY_VRUNTIME = attrgetter("vruntime")
-_BY_LAST_SCHED = attrgetter("last_sched")
 
 
 def _record(st: Stats, cls: str, lat: float) -> None:
@@ -324,6 +339,19 @@ def _reference_quantum(m: Machine, cfg: SimConfig, th: Thread, t: float,
     return t
 
 
+def _advance_idle_cores(cores: List[float], t_now: float, wake: float) -> None:
+    """No thread is runnable at t_now: jump every core sitting before the
+    next wake time straight to it. Equivalent to the historical
+    one-core-per-iteration advance (each idle core would advance to the
+    same wake on its own turn, in index order, with no state change in
+    between) but without re-running candidate selection per core."""
+    if wake <= t_now:  # defensive: a candidate would exist (ready <= t_now)
+        wake = t_now + 1.0
+    for ci in range(len(cores)):
+        if cores[ci] < wake:
+            cores[ci] = wake
+
+
 def simulate(
     workload: str,
     variant: str,
@@ -340,10 +368,9 @@ def simulate(
     the variant default (thread-scaling studies, Fig 15/22).
 
     ``cfg.engine`` selects the replay engine: "batched" (default) uses the
-    vectorized fast path in engine.py and falls back to the reference loop
-    for configurations it does not support (stochastic promotion policies);
-    "reference" forces the original per-event loop. Both engines produce
-    identical statistics for the same seed.
+    vectorized fast path in engine.py; "reference" forces the original
+    per-event loop. Both engines operate on the same DeviceState class and
+    produce identical statistics for the same seed.
     """
     cfg = cfg.variant(variant)
     if n_threads:
@@ -356,6 +383,7 @@ def simulate(
     n_req = max(total_req // cfg.n_threads, 1)
     traces = gen_traces(workload, cfg.n_threads, n_req, seed=seed, scale=cfg.scale)
     threads = [Thread(t, tr) for t, tr in enumerate(traces)]
+    page_space = int(max(tr["n_pages"] for tr in traces))
 
     use_batched = cfg.engine == "batched"
     if use_batched:
@@ -363,72 +391,100 @@ def simulate(
 
         use_batched = _engine.supported(cfg)
     if use_batched:
-        page_space = int(max(tr["n_pages"] for tr in traces))
         _engine.reset_cache_stats()
         m = _engine.BatchedMachine(cfg, seed, page_space)
         runner = _engine.batched_quantum
     else:
-        m = Machine(cfg, seed)
+        m = Machine(cfg, seed, page_space)
         runner = _reference_quantum
 
     st = m.stats
+    ds = m.state
     n_cores = cfg.n_cores
     cores = [0.0] * n_cores
     wslots_per_core: List[List[float]] = [[] for _ in range(n_cores)]
     policy = cfg.sched_policy
     sched_counter = 0
-    # alive keeps thread-index order, so candidate lists (and their
-    # tie-breaks) match a scan over the full thread table
-    alive = list(threads)
 
-    while alive:
+    # ---- scheduler: dense per-thread state + two priority queues ----
+    # Per-thread wake time / CFS vruntime / RR last-sched stamp live in
+    # dense lists; selection runs on two small heaps instead of a per-
+    # quantum scan over thread objects: a *wake queue* ordered by wake
+    # time and a *run queue* ordered by (policy key, thread index). Every
+    # non-done thread sits in exactly one queue, keys only change while a
+    # thread is OUT of its queue (vruntime/last_sched change when it runs,
+    # wake time when it parks), so entries are never stale. The (key, tid)
+    # tuple ordering reproduces the historical candidate scan exactly:
+    # same wake condition (ready <= t_now), same first-minimal-thread-
+    # index tie-break. RANDOM keeps an index-ordered runnable list so its
+    # rng.choice stream is unchanged.
+    nt = len(threads)
+    INF = float("inf")
+    n_alive = nt
+    vrun = [0.0] * nt
+    last_sched = [0] * nt
+    use_cfs = policy == "CFS"
+    use_random = policy == "RANDOM"
+    heappush, heappop = heapq.heappush, heapq.heappop
+    wake_q: List[Tuple[float, int]] = []
+    if use_random:
+        run_l = list(range(nt))  # all runnable at t=0, thread-index order
+        rng_choice = m.rng.choice
+    else:
+        keys = vrun if use_cfs else last_sched
+        run_q = [(0, ti) for ti in range(nt)]  # all runnable, key 0
+
+    while n_alive:
         # core with the earliest time (first minimal index, like
         # min(range, key))
         t_now = min(cores)
         c = cores.index(t_now)
-        cand = [th for th in alive if not th.running and th.ready <= t_now]
-        if not cand:
-            waits = [th.ready for th in alive if not th.running]
-            if not waits:  # all pending threads running on other cores
-                cores[c] = min(x for x in cores if x > t_now) if any(
-                    x > t_now for x in cores) else t_now + 1.0
+        if use_random:
+            while wake_q and wake_q[0][0] <= t_now:
+                bisect.insort(run_l, heappop(wake_q)[1])
+            if not run_l:
+                _advance_idle_cores(cores, t_now, wake_q[0][0])
                 continue
-            cores[c] = max(t_now, min(waits))
-            continue
-        if policy == "CFS":
-            th = min(cand, key=_BY_VRUNTIME)
-        elif policy == "RANDOM":
-            th = m.rng.choice(cand)
-        else:  # RR
-            th = min(cand, key=_BY_LAST_SCHED)
+            ti = rng_choice(run_l)
+            run_l.remove(ti)
+        else:
+            while wake_q and wake_q[0][0] <= t_now:
+                ti = heappop(wake_q)[1]
+                heappush(run_q, (keys[ti], ti))
+            if not run_q:
+                _advance_idle_cores(cores, t_now, wake_q[0][0])
+                continue
+            ti = heappop(run_q)[1]
         sched_counter += 1
-        th.last_sched = sched_counter
-        th.running = True
-        t = max(t_now, th.ready)
+        last_sched[ti] = sched_counter
+        th = threads[ti]
+        r = th.ready
+        t = t_now if t_now >= r else r
         t0 = t
         t = runner(m, cfg, th, t, wslots_per_core[c])
-        th.vruntime += t - t0
-        th.running = False
+        vrun[ti] += t - t0
         if th.i >= th.n and not th.replay:
             th.done = True
-            alive.remove(th)
+            n_alive -= 1
+        else:
+            heappush(wake_q, (th.ready, ti))
         cores[c] = t
 
     exec_ns = max(cores)
     st.exec_ns = exec_ns
-    st.busy_ns = m.channels.busy_ns
-    st.gc_events = m.channels.gc_events
+    st.busy_ns = ds.chan_busy_ns
+    st.gc_events = ds.gc_events
     out = st.as_dict()
     out.update(
         workload=workload, variant=variant, n_threads=cfg.n_threads,
         n_req_per_thread=n_req,
         total_req=st.n,
         throughput_rps=st.n / max(exec_ns, 1e-9) * 1e9,
-        ssd_bw_util=m.channels.busy_ns / max(exec_ns * cfg.n_channels, 1e-9),
-        flash_reads=m.channels.reads, flash_writes=m.channels.writes,
-        compactions=(m.log.compactions if m.log else 0),
+        ssd_bw_util=ds.chan_busy_ns / max(exec_ns * cfg.n_channels, 1e-9),
+        flash_reads=ds.flash_reads, flash_writes=ds.flash_writes,
+        compactions=(ds.log_compactions if m.log else 0),
         coalesce_ratio=(
-            m.log.flushed_lines * LINE / max(m.log.flushed_pages * PAGE, 1)
+            ds.log_flushed_lines * LINE / max(ds.log_flushed_pages * PAGE, 1)
             if m.log else None
         ),
     )

@@ -1,16 +1,26 @@
-"""CXL-SSD device model: write log, data cache, FTL channels, GC.
+"""CXL-SSD device policies: write log, data cache, FTL channels, GC.
 
 Faithful to the paper's §III-B / Table II structures at request-event
-granularity:
+granularity. Since the unified-state refactor, the classes here are thin
+*policy/view* layers over one authoritative ``DeviceState``
+(``device_state.py``): they own behaviour (lookup/insert/evict/compact
+rules, Algorithm 1's latency estimator), while every piece of mutable
+state — membership arrays, LRU stamps, log buffers and line bitmasks,
+channel/die busy timelines, free-page accounting — lives in the shared
+structure-of-arrays object both replay engines operate on.
 
   * ``WriteLog`` — double-buffered cacheline-granular circular log with a
-    two-level index (page -> {line -> newest}). Python dicts give the same
-    amortized O(1) lookup the paper's two-level hash tables give in
-    hardware; lookup *latency* is charged from the §V FPGA measurements
-    (72 ns log index, 49 ns cache index), so the host-visible timing — the
-    thing the simulator measures — matches the prototype, not Python.
-  * ``DataCache`` — set-associative, page-granular, LRU, write-back.
-  * ``Channels`` — per-channel FIFO busy-until timeline; Algorithm 1's
+    two-level index (page -> {line -> newest}) plus a per-page 64-bit
+    line-presence bitmask (the batched engine's classification input).
+    Lookup *latency* is charged from the §V FPGA measurements (72 ns log
+    index, 49 ns cache index), so the host-visible timing matches the
+    prototype, not Python.
+  * ``DataCache`` — set-associative, page-granular, LRU, write-back. LRU
+    recency is a monotone int64 stamp per page (fresh stamp per
+    touch/insert == OrderedDict move-to-end order, bit-for-bit); the
+    victim of a full set is its min-stamp slot. Stamps make a bulk LRU
+    touch a single NumPy scatter for the batched engine.
+  * ``Channels`` — per-channel bus + per-die busy timelines; Algorithm 1's
     latency estimator is literally ``max(0, busy_until - now) + t_read``.
   * GC — free-page accounting; when utilization crosses the threshold a
     channel is occupied for an erase + valid-page migration window, and
@@ -21,18 +31,18 @@ Capacities honor SimConfig.scale (ratios fixed, absolute sizes scaled).
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
+
+import numpy as np
 
 from repro.configs.base import SimConfig
+from repro.core.device_state import DIES_PER_CHANNEL, DeviceState
 
-
-DIES_PER_CHANNEL = 64  # Table II: 8 chips/channel x 8 dies/chip
 TRANSFER_NS = 800.0  # 4KB page over the channel bus (~5 GB/s ONFI bus)
 
 
 class Channels:
-    """Flash timing model: per-channel bus + per-die busy timelines.
+    """Flash timing policy over the shared bus/die timelines.
 
     Table II's geometry (16 channels x 8 chips x 8 dies = 1024 dies) means
     tProg/tR occupy a *die* while the channel bus is only held for the 4KB
@@ -41,113 +51,123 @@ class Channels:
     queue state exactly as the paper's FTL does.
     """
 
-    def __init__(self, cfg: SimConfig):
+    def __init__(self, cfg: SimConfig, state: DeviceState):
         self.cfg = cfg
-        self.bus = [0.0] * cfg.n_channels
-        self.die = [[0.0] * DIES_PER_CHANNEL for _ in range(cfg.n_channels)]
-        self.busy_ns = 0.0  # total bus-occupied ns (bandwidth accounting)
-        self.reads = 0
-        self.writes = 0
-        self.gc_events = 0
+        self.s = state
+        self.n_channels = cfg.n_channels
+        self.read_ns = cfg.flash.read_ns
+        self.program_ns = cfg.flash.program_ns
 
     def channel_of(self, page: int) -> int:
-        return (page * 1103515245 + 12345) % self.cfg.n_channels
+        return (page * 1103515245 + 12345) % self.n_channels
 
     def die_of(self, page: int) -> int:
-        return (page // self.cfg.n_channels) % DIES_PER_CHANNEL
+        return (page // self.n_channels) % DIES_PER_CHANNEL
 
     def estimate(self, page: int, now: float) -> float:
         """Algorithm 1: queued delay + read latency for this page's die/bus."""
-        ch = self.channel_of(page)
-        d = self.die_of(page)
-        wait = max(self.die[ch][d] - now, self.bus[ch] - now, 0.0)
-        return wait + self.cfg.flash.read_ns
+        ch = (page * 1103515245 + 12345) % self.n_channels
+        d = (page // self.n_channels) % DIES_PER_CHANNEL
+        s = self.s
+        wait = max(s.chan_die[ch][d] - now, s.chan_bus[ch] - now, 0.0)
+        return wait + self.read_ns
 
     def read(self, page: int, now: float) -> float:
         """Issue a flash page read; returns data-available time."""
-        ch = self.channel_of(page)
-        d = self.die_of(page)
-        start = max(now, self.die[ch][d])
-        sensed = start + self.cfg.flash.read_ns
-        xfer_start = max(sensed, self.bus[ch])
+        ch = (page * 1103515245 + 12345) % self.n_channels
+        d = (page // self.n_channels) % DIES_PER_CHANNEL
+        s = self.s
+        die = s.chan_die[ch]
+        start = max(now, die[d])
+        sensed = start + self.read_ns
+        xfer_start = max(sensed, s.chan_bus[ch])
         done = xfer_start + TRANSFER_NS
-        self.die[ch][d] = sensed
-        self.bus[ch] = done
-        self.busy_ns += TRANSFER_NS + self.cfg.flash.read_ns / DIES_PER_CHANNEL
-        self.reads += 1
+        die[d] = sensed
+        s.chan_bus[ch] = done
+        s.chan_busy_ns += TRANSFER_NS + self.read_ns / DIES_PER_CHANNEL
+        s.flash_reads += 1
         return done
 
     def write(self, page: int, now: float) -> float:
         """Issue a flash program; bus for the transfer, die for tProg."""
-        ch = self.channel_of(page)
-        d = self.die_of(page)
-        xfer_start = max(now, self.bus[ch])
-        self.bus[ch] = xfer_start + TRANSFER_NS
-        start = max(xfer_start + TRANSFER_NS, self.die[ch][d])
-        done = start + self.cfg.flash.program_ns
-        self.die[ch][d] = done
-        self.busy_ns += TRANSFER_NS + self.cfg.flash.program_ns / DIES_PER_CHANNEL
-        self.writes += 1
+        ch = (page * 1103515245 + 12345) % self.n_channels
+        d = (page // self.n_channels) % DIES_PER_CHANNEL
+        s = self.s
+        die = s.chan_die[ch]
+        xfer_start = max(now, s.chan_bus[ch])
+        s.chan_bus[ch] = xfer_start + TRANSFER_NS
+        start = max(xfer_start + TRANSFER_NS, die[d])
+        done = start + self.program_ns
+        die[d] = done
+        s.chan_busy_ns += TRANSFER_NS + self.program_ns / DIES_PER_CHANNEL
+        s.flash_writes += 1
         return done
 
     def gc(self, now: float) -> None:
         """Occupy one die with erase + valid-page migration (plus bus time
         for the migrated pages)."""
         cfg = self.cfg
-        ch = self.gc_events % cfg.n_channels
-        d = self.gc_events % DIES_PER_CHANNEL
+        s = self.s
+        ch = s.gc_events % cfg.n_channels
+        d = s.gc_events % DIES_PER_CHANNEL
         cost = cfg.flash.erase_ns + 8 * (cfg.flash.read_ns + cfg.flash.program_ns)
-        self.die[ch][d] = max(now, self.die[ch][d]) + cost
-        self.bus[ch] = max(now, self.bus[ch]) + 8 * TRANSFER_NS
-        self.busy_ns += cost / DIES_PER_CHANNEL
-        self.gc_events += 1
+        s.chan_die[ch][d] = max(now, s.chan_die[ch][d]) + cost
+        s.chan_bus[ch] = max(now, s.chan_bus[ch]) + 8 * TRANSFER_NS
+        s.chan_busy_ns += cost / DIES_PER_CHANNEL
+        s.gc_events += 1
 
 
 class Ftl:
     """Free-page accounting driving the GC model."""
 
-    def __init__(self, cfg: SimConfig, channels: Channels):
+    def __init__(self, cfg: SimConfig, state: DeviceState, channels: Channels):
         self.cfg = cfg
+        self.s = state
         self.channels = channels
-        self.total_pages = max(cfg.n_flash_pages, 1)
-        self.used = int(self.total_pages * cfg.gc_threshold)  # preconditioned
 
     def on_flash_write(self, now: float) -> None:
-        self.used += 1  # out-of-place update consumes a free page
-        if self.used >= self.total_pages:
+        s = self.s
+        s.ftl_used += 1  # out-of-place update consumes a free page
+        if s.ftl_used >= s.ftl_total:
             self.channels.gc(now)
-            self.used -= max(int(self.total_pages * (1.0 - self.cfg.gc_threshold)), 1)
+            s.ftl_used -= max(
+                int(s.ftl_total * (1.0 - self.cfg.gc_threshold)), 1)
 
 
 class WriteLog:
-    """Double-buffered cacheline write log with two-level indexing."""
+    """Double-buffered cacheline write log with two-level indexing.
 
-    def __init__(self, cfg: SimConfig):
+    State (active/old dicts, fill level, per-page line bitmask) lives on
+    DeviceState. Appends maintain the bitmask but do NOT bump page epochs
+    (line presence only grows between compactions; the batched engine
+    absorbs new lines through its log overlay). Compaction breaks the
+    monotonicity — lines vanish all at once — so the swap bumps every page
+    the drained buffer held."""
+
+    def __init__(self, cfg: SimConfig, state: DeviceState):
         self.cfg = cfg
-        self.cap = max(cfg.log_entries // 2, 16)  # per buffer (double-buffered)
-        self.active: Dict[int, Dict[int, bool]] = {}
-        self.active_n = 0
-        self.old: Dict[int, Dict[int, bool]] = {}
-        self.compactions = 0
-        self.flushed_pages = 0
-        self.flushed_lines = 0
+        self.s = state
+        self.cap = state.log_cap
 
     def lookup(self, page: int, line: int) -> bool:
-        e = self.active.get(page)
+        s = self.s
+        e = s.log_active.get(page)
         if e is not None and line in e:
             return True
-        e = self.old.get(page)
+        e = s.log_old.get(page)
         return e is not None and line in e
 
     def append(self, page: int, line: int) -> bool:
         """Returns True if this append filled the active log (compaction)."""
-        e = self.active.get(page)
+        s = self.s
+        e = s.log_active.get(page)
         if e is None:
-            e = self.active[page] = {}
+            e = s.log_active[page] = {}
         if line not in e:
             e[line] = True
-            self.active_n += 1
-        return self.active_n >= self.cap
+            s.log_bits[page] |= np.uint64(1 << line)
+            s.log_active_n += 1
+        return s.log_active_n >= self.cap
 
     def bulk_append_new(self, pages, lines) -> None:
         """Append a batch of (page, line) entries in order (page insertion
@@ -157,8 +177,15 @@ class WriteLog:
         classified. Used by the batched engine; the batch is bounded so the
         log can never fill mid-batch (the engine's fill prediction counts
         candidate-new pairs, an overestimate of the true fill level)."""
-        act = self.active
-        n = self.active_n
+        s = self.s
+        # bitwise_or.at: pages may repeat within a batch (several new lines
+        # of one page); plain fancy-index |= would drop all but one OR.
+        # Setting bits for pairs the dup-tolerant scalar path then skips is
+        # harmless — they are already present by definition.
+        np.bitwise_or.at(s.log_bits, pages,
+                         np.uint64(1) << lines.astype(np.uint64))
+        act = s.log_active
+        n = s.log_active_n
         for p, l in zip(pages.tolist(), lines.tolist()):
             e = act.get(p)
             if e is None:
@@ -167,70 +194,128 @@ class WriteLog:
             elif l not in e:
                 e[l] = True
                 n += 1
-        self.active_n = n
+        s.log_active_n = n
 
-    def swap_for_compaction(self) -> Dict[int, Dict[int, bool]]:
-        old = self.active
-        self.old = old
-        self.active = {}
-        self.active_n = 0
-        self.compactions += 1
+    def swap_for_compaction(self):
+        s = self.s
+        s.log_bits[:] = 0
+        old = s.log_active
+        if old:
+            s.bump_list(list(old))
+        s.log_old = old
+        s.log_active = {}
+        s.log_active_n = 0
+        s.log_compactions += 1
         return old
 
     def finish_compaction(self) -> None:
-        self.old = {}
+        self.s.log_old = {}
+
+    # observability passthroughs (BENCH / simulate tail)
+    @property
+    def compactions(self) -> int:
+        return self.s.log_compactions
+
+    @property
+    def flushed_pages(self) -> int:
+        return self.s.log_flushed_pages
+
+    @property
+    def flushed_lines(self) -> int:
+        return self.s.log_flushed_lines
 
 
 class DataCache:
-    """Set-associative page-granular LRU write-back cache."""
+    """Set-associative page-granular LRU write-back cache over the shared
+    stamp/membership arrays.
 
-    def __init__(self, cfg: SimConfig, n_pages: Optional[int] = None):
+    Exact-equivalence contract with the OrderedDict implementation it
+    replaced: every touch or insert assigns a fresh monotone stamp
+    (``state.cache_clock``), so "least recently used" == "smallest stamp",
+    ties are impossible, and eviction picks the same victim the ordered
+    dict's popitem(last=False) would."""
+
+    def __init__(self, cfg: SimConfig, state: DeviceState):
         self.cfg = cfg
-        cap = n_pages if n_pages is not None else cfg.cache_pages
-        self.ways = max(cfg.cache_ways, 1)
-        self.n_sets = max(cap // self.ways, 1)
-        self.sets = [OrderedDict() for _ in range(self.n_sets)]
-        self.hits = 0
-        self.misses = 0
-
-    def _set(self, page: int) -> OrderedDict:
-        return self.sets[page % self.n_sets]
+        self.s = state
+        self.ways = state.cache_ways
+        self.n_sets = state.cache_n_sets
 
     def lookup(self, page: int, touch: bool = True) -> Optional[bool]:
         """Returns dirty-bit if present else None."""
-        s = self._set(page)
-        d = s.get(page)
-        if d is None:
+        s = self.s
+        if not s.cache_res_mv[page]:
             return None
         if touch:
-            s.move_to_end(page)
-        return d
+            c = s.cache_clock + 1
+            s.cache_clock = c
+            s.cache_stamp_mv[page] = c
+        return s.cache_dirty_mv[page]
 
     def insert(self, page: int, dirty: bool) -> Optional[Tuple[int, bool]]:
         """Insert/overwrite; returns evicted (page, dirty) if any."""
-        s = self._set(page)
-        if page in s:
-            s[page] = s[page] or dirty
-            s.move_to_end(page)
+        s = self.s
+        if s.cache_res_mv[page]:
+            if dirty:
+                s.cache_dirty_mv[page] = True
+            c = s.cache_clock + 1
+            s.cache_clock = c
+            s.cache_stamp_mv[page] = c
             return None
+        row = s.cache_sets[page % self.n_sets]
+        stamp = s.cache_stamp_mv
+        victim_w = 0
+        victim_p = -1
+        victim_stamp = None
+        for w, q in enumerate(row):
+            if q < 0:  # free slot: no eviction needed
+                victim_w = w
+                victim_p = -1
+                break
+            sq = stamp[q]
+            if victim_stamp is None or sq < victim_stamp:
+                victim_stamp = sq
+                victim_w = w
+                victim_p = q
         evicted = None
-        if len(s) >= self.ways:
-            evicted = s.popitem(last=False)
-        s[page] = dirty
+        if victim_p >= 0:
+            evicted = (victim_p, s.cache_dirty_mv[victim_p])
+            s.cache_res_mv[victim_p] = False
+            s.cache_way[victim_p] = -1
+            s.bump(victim_p)
+        row[victim_w] = page
+        s.cache_way[page] = victim_w
+        s.cache_res_mv[page] = True
+        s.cache_dirty_mv[page] = dirty
+        c = s.cache_clock + 1
+        s.cache_clock = c
+        s.cache_stamp_mv[page] = c
+        s.bump(page)
         return evicted
 
     def mark_dirty(self, page: int) -> None:
-        s = self._set(page)
-        if page in s:
-            s[page] = True
+        s = self.s
+        if s.cache_res_mv[page]:
+            s.cache_dirty_mv[page] = True
 
-    def touch_many(self, pages) -> None:
-        """Refresh LRU recency for a batch of resident pages, in order."""
-        sets = self.sets
-        n_sets = self.n_sets
-        for p in pages:
-            s = sets[p % n_sets]
-            s.move_to_end(p)
+    def bulk_touch(self, pages) -> None:
+        """Refresh LRU recency for a batch of resident-page touch events in
+        event order — ONE scatter. Duplicate pages resolve to their last
+        occurrence (scatter keeps the last write), and the clock advances
+        by the event count, so the stamps are identical to the per-event
+        scalar path's."""
+        k = pages.shape[0]
+        if not k:
+            return
+        s = self.s
+        c = s.cache_clock
+        s.cache_stamp[pages] = np.arange(c + 1, c + k + 1)
+        s.cache_clock = c + k
 
     def remove(self, page: int) -> None:
-        self._set(page).pop(page, None)
+        s = self.s
+        if s.cache_res_mv[page]:
+            s.cache_sets[page % self.n_sets][s.cache_way[page]] = -1
+            s.cache_way[page] = -1
+            s.cache_res_mv[page] = False
+            s.bump(page)

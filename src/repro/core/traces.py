@@ -24,6 +24,11 @@ matching the paper's per-thread trace capture.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
+import os
+import tempfile
+from pathlib import Path
 from typing import Dict, List
 
 import numpy as np
@@ -189,10 +194,93 @@ def gen_thread_trace(
     }
 
 
+# ---------------------------------------------------------------------------
+# Trace caching. A benchmark grid asks for the same
+# (workload, threads, n_req, seed, scale) stream once per *variant*
+# (fig14's 8-variant row shares two thread counts), and every fresh
+# process (CI parity smoke, engine calibration, paired benchmarks) pays
+# full generation again. Two layers fix that:
+#   * an in-process lru_cache (hot within one grid worker), and
+#   * an on-disk artifact cache (artifacts/traces/, npz), keyed by the
+#     generation parameters plus a fingerprint of THIS file — editing the
+#     generator invalidates stale traces automatically. Writes are atomic
+#     (tmp + rename) so parallel grid workers can race safely, and only
+#     streams up to _DISK_CACHE_MAX_EVENTS are persisted (larger ones are
+#     cheap relative to their simulation and would bloat artifacts/).
+# Callers treat the returned arrays as read-only (the simulator copies
+# the one column it re-types, gap_ns -> float64).
+# ---------------------------------------------------------------------------
+
+_TRACE_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "traces"
+_DISK_CACHE_MAX_EVENTS = 1_000_000
+
+
+@functools.lru_cache(maxsize=1)
+def _source_fingerprint() -> str:
+    return hashlib.sha1(Path(__file__).read_bytes()).hexdigest()[:12]
+
+
+def _disk_cache_enabled() -> bool:
+    return os.environ.get("REPRO_TRACE_CACHE", "1") != "0"
+
+
+def _load_traces(path: Path, n_threads: int) -> List[Dict[str, np.ndarray]]:
+    with np.load(path) as z:
+        n_pages = z["n_pages"]
+        return [
+            {
+                "page": z[f"page_{t}"],
+                "line": z[f"line_{t}"],
+                "write": z[f"write_{t}"],
+                "gap_ns": z[f"gap_{t}"],
+                "n_pages": int(n_pages[t]),
+            }
+            for t in range(n_threads)
+        ]
+
+
+def _store_traces(path: Path, traces: List[Dict[str, np.ndarray]]) -> None:
+    arrays = {"n_pages": np.array([tr["n_pages"] for tr in traces])}
+    for t, tr in enumerate(traces):
+        arrays[f"page_{t}"] = tr["page"]
+        arrays[f"line_{t}"] = tr["line"]
+        arrays[f"write_{t}"] = tr["write"]
+        arrays[f"gap_{t}"] = tr["gap_ns"]
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)  # atomic vs concurrent grid workers
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+@functools.lru_cache(maxsize=4)
 def gen_traces(
     workload: str, n_threads: int, n_req: int, seed: int = 0, scale: int = 64
 ) -> List[Dict[str, np.ndarray]]:
     spec = WORKLOADS[workload]
-    return [
+    use_disk = (_disk_cache_enabled()
+                and n_threads * n_req <= _DISK_CACHE_MAX_EVENTS)
+    path = _TRACE_DIR / (
+        f"{workload}_{n_threads}t_{n_req}r_{seed}s_{scale}x_"
+        f"{_source_fingerprint()}.npz")
+    if use_disk and path.exists():
+        try:
+            return _load_traces(path, n_threads)
+        except Exception:  # corrupt/partial artifact: regenerate
+            pass
+    traces = [
         gen_thread_trace(spec, n_req, seed * 1000 + t, scale) for t in range(n_threads)
     ]
+    if use_disk:
+        try:
+            _store_traces(path, traces)
+        except OSError:  # read-only checkout etc: caching is best-effort
+            pass
+    return traces

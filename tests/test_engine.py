@@ -55,6 +55,44 @@ def test_engine_parity_demotion_pressure():
                  _run("batched", "dlrm", "skybyte-full", **over))
 
 
+def test_engine_parity_gc_pressure():
+    """GC-triggering flash misses: a tiny flash array makes the FTL's
+    free-page accounting cross the GC threshold repeatedly, so the
+    transcribed miss/eviction paths must drive erase + migration windows
+    (channel timeline perturbations) identically in both engines."""
+    over = dict(flash_bytes=2 << 30, ssd_dram_bytes=32 << 20, cache_ways=1,
+                write_log_bytes=1 << 20)
+    for variant in ("base-cssd", "skybyte-w"):
+        a = _run("reference", "radix", variant, n=16_000, **over)
+        b = _run("batched", "radix", variant, n=16_000, **over)
+        assert a["gc_events"] > 0, "corner must actually trigger GC"
+        _assert_same(a, b)
+
+
+def test_engine_parity_back_to_back_log_fills():
+    """Back-to-back write-log fills: a log of a few dozen entries makes the
+    fill -> compaction-drain boundary fire every handful of writes, so the
+    engine's fill prediction + transcribed drain run constantly."""
+    over = dict(write_log_bytes=1 << 19)
+    a = _run("reference", "tpcc", "skybyte-w", n=10_000, **over)
+    b = _run("batched", "tpcc", "skybyte-w", n=10_000, **over)
+    assert a["compactions"] > 20, "corner must force frequent compactions"
+    _assert_same(a, b)
+
+
+def test_engine_parity_demotion_under_host_pressure():
+    """Demotion under host-tier pressure: promotion threshold 1 with a
+    host tier of a few dozen pages turns every promotion into a
+    promote+demote pair (with the demoted page's dirty writeback), all on
+    the transcribed promotion boundary path."""
+    over = dict(host_dram_bytes=16 << 20, promote_threshold=1)
+    for variant in ("skybyte-p", "skybyte-full"):
+        a = _run("reference", "dlrm", variant, n=10_000, **over)
+        b = _run("batched", "dlrm", variant, n=10_000, **over)
+        assert a["demotions"] > 100, "corner must churn the host tier"
+        _assert_same(a, b)
+
+
 @pytest.mark.parametrize("policy", ["RR", "RANDOM"])
 def test_engine_parity_sched_policies(policy):
     """Scheduling policy decisions (incl. the RANDOM rng stream) are shared
@@ -81,6 +119,23 @@ def test_engine_fallback_policies():
         over = dict(promo_policy=policy)
         _assert_same(_run("reference", "srad", "skybyte-cp", **over),
                      _run("batched", "srad", "skybyte-cp", **over))
+
+
+def test_batched_never_calls_serve(monkeypatch):
+    """Machine.serve() is the reference loop's parity oracle ONLY: the
+    batched engine transcribes every boundary event (misses, GC, log
+    fills, promotions, Base-CSSD write misses) into its own paths."""
+    from repro.core import engine as eng
+
+    def boom(*a, **k):
+        raise AssertionError("batched engine called Machine.serve()")
+
+    monkeypatch.setattr(eng.BatchedMachine, "serve", boom, raising=False)
+    cells = [("bfs-dense", "skybyte-c", {}), ("srad", "skybyte-w", {}),
+             ("tpcc", "base-cssd", {}), ("dlrm", "skybyte-full", {}),
+             ("bc", "skybyte-cp", dict(promo_policy="tpp"))]
+    for workload, variant, over in cells:
+        _run("batched", workload, variant, n=4_000, **over)
 
 
 def test_engine_unknown_rejected():

@@ -126,21 +126,51 @@ def test_cache_engaged_and_observable():
 
 
 def test_epoch_monotonicity_and_bumps():
-    """Membership mutations bump page epochs; epochs never decrease."""
+    """Membership mutations bump page epochs; epochs never decrease.
+
+    Since the unified-state refactor the epoch board lives on the shared
+    DeviceState, so the plain Machine (reference engine) maintains it too —
+    the same assertions hold for both machine types."""
+    from repro.core.simulator import Machine
+
+    cfg = SimConfig().variant("skybyte-full")
+    for m in (engine.BatchedMachine(cfg, seed=0, page_space=64),
+              Machine(cfg, seed=0, page_space=64)):
+        ds = m.state
+        assert ds.epoch_clock == 0
+        m.cache.insert(3, True)
+        e1 = int(ds.page_epoch[3])
+        assert e1 > 0
+        m.cache.remove(3)
+        assert int(ds.page_epoch[3]) > e1
+        m.host[5] = True
+        assert int(ds.page_epoch[5]) > 0
+        # log appends must NOT bump (absorbed by the log overlay instead)
+        clock = ds.epoch_clock
+        m.log.append(7, 1)
+        assert ds.epoch_clock == clock
+        assert int(ds.log_bits[7]) == 1 << 1  # bitmask mirrors the append
+        # compaction floods: every page the drained buffer held is bumped
+        m.log.swap_for_compaction()
+        assert int(ds.page_epoch[7]) > 0
+        assert int(ds.log_bits[7]) == 0
+
+
+def test_shared_state_single_copy():
+    """Tentpole invariant: both engines' machines expose ONE DeviceState;
+    the policy views (cache/log/host) mutate the same arrays the batched
+    classifier gathers — no shadow mirrors anywhere."""
     cfg = SimConfig().variant("skybyte-full")
     m = engine.BatchedMachine(cfg, seed=0, page_space=64)
-    assert m.epoch_clock == 0
-    m.cache.insert(3, True)
-    e1 = int(m.page_epoch[3])
-    assert e1 > 0
-    m.cache.remove(3)
-    assert int(m.page_epoch[3]) > e1
-    m.host[5] = True
-    assert int(m.page_epoch[5]) > 0
-    # log appends must NOT bump (absorbed by the log overlay instead)
-    clock = m.epoch_clock
-    m.log.append(7, 1)
-    assert m.epoch_clock == clock
-    # compaction floods: every page the drained buffer held is bumped
-    m.log.swap_for_compaction()
-    assert int(m.page_epoch[7]) > 0
+    ds = m.state
+    assert m.cache.s is ds and m.log.s is ds and m.channels.s is ds
+    assert m.host is ds.host and m.acc_count is ds.acc
+    m.cache.insert(9, False)
+    assert bool(ds.cache_res[9])
+    m.host[11] = True
+    assert bool(ds.host.arr[11])
+    m.cache.remove(9)
+    assert not bool(ds.cache_res[9])
+    # engine.py no longer defines any shadow-mirror subclasses
+    for name in ("_ShadowHost", "_ShadowCache", "_ShadowLog"):
+        assert not hasattr(engine, name)
