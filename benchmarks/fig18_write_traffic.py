@@ -22,6 +22,11 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                 "compactions": r.get("compactions", 0),
                 "coalesce_ratio": r.get("coalesce_ratio"),
                 "gc_events": r["gc_events"],
+                # block-FTL accounting (core/flash.py): device-level write
+                # amplification and the GC-inclusive tail latency
+                "waf": round(r["waf"], 3),
+                "gc_migrated_pages": r["gc_migrated_pages"],
+                "lat_p99_ns": round(r["lat_p99_ns"], 1),
             })
     red = [r["reduction_vs_base"] for r in rows
            if r["variant"] in ("skybyte-w", "skybyte-wp", "skybyte-full")
@@ -41,7 +46,7 @@ def main(total_req: int = TOTAL_REQ, force: bool = False):
     print_csv("fig18_write_traffic (paper: 23.08x reduction)",
               rows, ["workload", "variant", "flash_write_MB",
                      "reduction_vs_base", "compactions", "coalesce_ratio",
-                     "gc_events"])
+                     "gc_events", "waf", "gc_migrated_pages", "lat_p99_ns"])
     return rows
 
 

@@ -1,0 +1,72 @@
+"""GC / tail-latency figure (beyond-paper): over-provisioning x GC-policy
+sweep on the block-granular flash backend (core/flash.py).
+
+The paper's headline mechanisms are motivated by "unpredictable events
+such as garbage collection"; this section quantifies that regime
+directly. For each (workload, variant) it sweeps the physical
+over-provisioning ratio and the GC victim policy and reports device
+write amplification (WAF), migrated-page volume, and the request latency
+tail (p50/p95/p99) — the tail is where GC-induced die-busy windows show
+up, and where the coordinated context switch + write-log coalescing pay.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import SimConfig
+
+from benchmarks.common import collect_cells, cached_sim, print_csv
+
+TOTAL_REQ = 600_000
+# the two write-heaviest Table I profiles: GC engages across the whole
+# OP sweep even at --quick request counts
+WLS = ("srad", "dlrm")
+VARIANTS = ("base-cssd", "skybyte-w", "skybyte-full")
+OP_RATIOS = (0.03, 0.125, 0.25)
+GC_POLICIES = ("greedy", "cost-benefit")
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WLS:
+        for v in VARIANTS:
+            for op in OP_RATIOS:
+                for pol in GC_POLICIES:
+                    cfg = dataclasses.replace(SimConfig(), op_ratio=op,
+                                              gc_policy=pol)
+                    r = cached_sim(wl, v, cfg=cfg, total_req=total_req,
+                                   force=force)
+                    rows.append({
+                        "workload": wl, "variant": v,
+                        "op_ratio": op, "gc_policy": pol,
+                        "waf": round(r["waf"], 3),
+                        "gc_events": r["gc_events"],
+                        "gc_migrated_pages": r["gc_migrated_pages"],
+                        "flash_write_MB": round(
+                            r["flash_write_bytes"] / 1e6, 3),
+                        "wear_max_erases": r.get("wear_max_erases", 0),
+                        "lat_p50_ns": round(r["lat_p50_ns"], 1),
+                        "lat_p95_ns": round(r["lat_p95_ns"], 1),
+                        "lat_p99_ns": round(r["lat_p99_ns"], 1),
+                    })
+    return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig_gc_tail (block FTL: over-provisioning x GC policy, "
+              "WAF + latency tail)",
+              rows, ["workload", "variant", "op_ratio", "gc_policy", "waf",
+                     "gc_events", "gc_migrated_pages", "flash_write_MB",
+                     "wear_max_erases", "lat_p50_ns", "lat_p95_ns",
+                     "lat_p99_ns"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,7 @@ from benchmarks import (
     fig21_dramsize,
     fig22_flashlat,
     fig23_migration,
+    fig_gc_tail,
     tab3_readlat,
 )
 
@@ -61,6 +62,7 @@ SECTIONS = [
     ("fig21", fig21_dramsize, 600_000, 200_000),
     ("fig22", fig22_flashlat, 600_000, 200_000),
     ("fig23", fig23_migration, 600_000, 200_000),
+    ("gc_tail", fig_gc_tail, 600_000, 200_000),
 ]
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
@@ -132,10 +134,26 @@ def main(argv=None) -> None:
     if args.jobs <= 0:
         phys = common.physical_cores()
         logical = os.cpu_count() or 1
-        args.jobs = phys
-        print(f"# jobs auto-detect: {phys} physical core(s) "
-              f"({logical} logical; SMT/vCPU siblings excluded) "
-              f"-> --jobs {args.jobs}", flush=True)
+        env_jobs = os.environ.get("REPRO_JOBS", "").strip()
+        try:
+            env_jobs_n = int(env_jobs) if env_jobs else 0
+        except ValueError:
+            print(f"# jobs: ignoring non-integer REPRO_JOBS={env_jobs!r}, "
+                  f"falling back to auto-detect", flush=True)
+            env_jobs_n = 0
+        if env_jobs_n > 0:
+            # container topology can overstate real cores (the 2-vCPU /
+            # 1-host-core case); REPRO_JOBS pins the grid width without
+            # editing every invocation
+            args.jobs = env_jobs_n
+            print(f"# jobs: REPRO_JOBS={args.jobs} override "
+                  f"(detected {phys} physical / {logical} logical core(s))",
+                  flush=True)
+        else:
+            args.jobs = phys
+            print(f"# jobs auto-detect: {phys} physical core(s) "
+                  f"({logical} logical; SMT/vCPU siblings excluded) "
+                  f"-> --jobs {args.jobs}", flush=True)
 
     if args.engine:
         os.environ["REPRO_SIM_ENGINE"] = args.engine

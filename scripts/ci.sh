@@ -9,6 +9,7 @@
 #   bash scripts/ci.sh parity     # engine-parity smoke only (~15 s)
 #   bash scripts/ci.sh tests      # tier-1 pytest only
 #   bash scripts/ci.sh ref        # simulator tests on the reference engine
+#   bash scripts/ci.sh gc         # block-FTL GC/tail figure in quick mode
 #   bash scripts/ci.sh bench      # orchestrator smoke + baseline diff
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -44,11 +45,25 @@ if [[ "$STAGE" == "all" || "$STAGE" == "ref" ]]; then
     python -m pytest -x -q tests/test_simulator.py
 fi
 
+if [[ "$STAGE" == "all" || "$STAGE" == "gc" ]]; then
+  echo "== block-FTL GC / tail-latency figure (quick) =="
+  # Exercises the block-granular flash backend end-to-end (OP x victim-
+  # policy sweep, WAF + p99 rows) without touching BENCH_sim.json; the
+  # bench stage below carries the same section through the CPU-time gate.
+  python - <<'PY'
+from benchmarks import fig_gc_tail
+rows = fig_gc_tail.main(total_req=200_000)
+assert rows, "fig_gc_tail produced no rows"
+assert any(r["gc_events"] > 0 for r in rows), "GC never engaged in sweep"
+PY
+fi
+
 if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then
   echo "== benchmark orchestrator smoke (--quick, auto physical-core jobs) =="
-  # Two representative sections: fig14 covers the full 7x8 variant grid,
-  # fig9 covers per-cfg cache keys. --profile prints grid req/s.
-  python -m benchmarks.run --quick --only fig14,fig9 \
+  # Representative sections: fig14 covers the full 7x8 variant grid, fig9
+  # covers per-cfg cache keys, gc_tail covers the block-FTL sweep (so the
+  # CPU-time gate below sees the flash backend). --profile prints req/s.
+  python -m benchmarks.run --quick --only fig14,fig9,gc_tail \
     --skip-roofline --profile
   test -f BENCH_sim.json && echo "BENCH_sim.json written"
   echo "== CPU-time diff vs committed baseline (wall is informational) =="

@@ -282,6 +282,22 @@ class SimConfig:
     # --- GC (Table II) ---
     gc_threshold: float = 0.80  # trigger when utilization above this
     gc_pages_per_event: int = 256  # valid pages migrated per GC event
+    # --- block-granular flash backend (core/flash.py) ---
+    # "block": erase-block FTL with log-structured page mapping, dense
+    #   valid bitmaps, victim-policy GC whose cost is proportional to the
+    #   victim's live pages, and wear/WAF accounting (the default).
+    # "legacy": the free-page counter with fixed 8-page GC cost.
+    ftl_backend: str = "block"
+    pages_per_block: int = 64  # erase-block size in (4KB) pages
+    # Physical over-provisioning: phys pages = logical * (1 + op_ratio).
+    # The default is deliberately at the low end: scale=128 shrinks every
+    # footprint ~two orders of magnitude but benchmark windows shrink
+    # with it, so a datacenter-class OP fraction would never exhaust the
+    # spare pool inside a run — 3% keeps GC live on every Table I
+    # workload at the fig18 request counts (benchmarks/fig_gc_tail.py
+    # sweeps this knob upward).
+    op_ratio: float = 0.03
+    gc_policy: str = "greedy"  # "greedy" | "cost-benefit"
     # --- context switch (paper §III-A) ---
     ctx_switch_ns: float = 2_000.0
     ctx_threshold_ns: float = 2_000.0

@@ -103,9 +103,9 @@ class DeviceState:
         "log_compactions", "log_flushed_pages", "log_flushed_lines",
         # flash channels / dies
         "chan_bus", "chan_die", "chan_busy_ns",
-        "flash_reads", "flash_writes", "gc_events",
-        # FTL free-page accounting
-        "ftl_total", "ftl_used",
+        "flash_reads", "flash_writes", "gc_events", "gc_migrated_pages",
+        # FTL: legacy free-page accounting + block-granular backend state
+        "ftl_total", "ftl_used", "flash",
         # promotion counters
         "acc",
     )
@@ -159,9 +159,20 @@ class DeviceState:
         self.flash_reads = 0
         self.flash_writes = 0
         self.gc_events = 0
+        self.gc_migrated_pages = 0
         # --- FTL ---
         self.ftl_total = max(cfg.n_flash_pages, 1)
         self.ftl_used = int(self.ftl_total * cfg.gc_threshold)  # preconditioned
+        if cfg.ftl_backend == "block":
+            from repro.core.flash import FlashState
+
+            self.flash = FlashState(page_space, cfg.pages_per_block,
+                                    cfg.op_ratio)
+        elif cfg.ftl_backend == "legacy":
+            self.flash = None
+        else:
+            raise ValueError(
+                f"unknown SimConfig.ftl_backend: {cfg.ftl_backend!r}")
         # --- promotion counters ---
         self.acc = PromoCounts(page_space)
 

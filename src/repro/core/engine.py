@@ -85,7 +85,7 @@ import numpy as np
 
 from repro.configs.base import SimConfig
 from repro.core.device_state import DIES_PER_CHANNEL
-from repro.core.simulator import Machine, Thread, _record
+from repro.core.simulator import Machine, Thread, _lat_bin, _record
 from repro.core.ssd import TRANSFER_NS
 
 # Vectorization break-even WITHOUT the classification cache: below this
@@ -214,8 +214,7 @@ class BatchedMachine(Machine):
             cfg.flash.program_ns,
             TRANSFER_NS + cfg.flash.read_ns / DIES_PER_CHANNEL,
             TRANSFER_NS + cfg.flash.program_ns / DIES_PER_CHANNEL,
-            self.channels.gc, ds.ftl_total,
-            max(int(ds.ftl_total * (1.0 - cfg.gc_threshold)), 1),
+            self.ftl.on_flash_write,
             cfg.max_outstanding, cfg.enable_ctx_switch,
             memoryview(ds.log_bits) if cfg.enable_write_log else None,
             ds.log_cap,
@@ -442,10 +441,11 @@ def _apply_prefix(m: BatchedMachine, cfg: SimConfig, th: Thread,
 
 def _insert_miss(ds, st, p, dirty, t, cclk, csets, cway, n_sets, ways, cres,
                  cdirty, cstamp, epoch_mv, journal, chan_bus, chan_die,
-                 n_ch, t_prog, wr_busy, channels_gc, ftl_total, ftl_reclaim):
+                 n_ch, t_prog, wr_busy, ftl_write):
     """Inlined DataCache.insert (page known non-resident) + dirty-victim
-    write-back (Machine._handle_evict: Channels.write + Ftl.on_flash_write,
-    GC included) over the shared state — the exact operation order and
+    write-back (Machine._handle_evict: Channels.write + ftl.on_flash_write
+    — the block FTL's mapping/GC or the legacy counter, dispatched once
+    per program) over the shared state — the exact operation order and
     float expressions of the methods it replaces, minus their dispatch.
     ``cclk`` is the caller's hoisted LRU clock; returns its new value.
 
@@ -490,7 +490,7 @@ def _insert_miss(ds, st, p, dirty, t, cclk, csets, cway, n_sets, ways, cres,
     journal.append(p)
     ds.epoch_clock = ec
     if ev_dirty:
-        # dirty write-back: inlined Channels.write + Ftl.on_flash_write
+        # dirty write-back: inlined Channels.write + the FTL dispatch
         ch = (vp * 1103515245 + 12345) % n_ch
         die = chan_die[ch]
         dd = (vp // n_ch) % DIES_PER_CHANNEL
@@ -503,10 +503,7 @@ def _insert_miss(ds, st, p, dirty, t, cclk, csets, cway, n_sets, ways, cres,
         ds.chan_busy_ns += wr_busy
         ds.flash_writes += 1
         st.flash_write_pages += 1
-        ds.ftl_used += 1
-        if ds.ftl_used >= ftl_total:
-            channels_gc(t)
-            ds.ftl_used -= ftl_reclaim
+        ftl_write(t, vp)
     return cclk
 
 
@@ -523,9 +520,12 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
     read miss (estimate -> read -> fill -> park). State is probed through
     the shared DeviceState memoryviews, and the entire miss machinery —
     channel/die timing, cache fill + victim eviction, dirty write-back,
-    FTL/GC accounting, epoch bumps — is inlined over the same shared
-    arrays (~3 us of call dispatch per miss otherwise, and misses are up
-    to ~20% of all events in write-storm phases). Returns (i, t, blocked).
+    epoch bumps — is inlined over the same shared arrays (~3 us of call
+    dispatch per miss otherwise, and misses are up to ~20% of all events
+    in write-storm phases); the FTL (block mapping/GC or the legacy
+    counter) is ONE prepacked `on_flash_write` dispatch per flash
+    program, shared verbatim with the reference loop so the backends can
+    never diverge between engines. Returns (i, t, blocked).
     """
     pages, lines, writes, gaps = m._columns(th)
     st = m.stats
@@ -539,8 +539,10 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
      cway, n_sets, ways, epoch_mv, journal, promoting, skybyte_count, acc,
      promo_thr, lat_host, base, cache_idx, dram, lat_log, lat_cache,
      ctx_ns, ctx_thr, chan_bus, chan_die, n_ch, t_read, t_prog, rd_busy,
-     wr_busy, channels_gc, ftl_total, ftl_reclaim, max_out, ctx_on,
+     wr_busy, ftl_write, max_out, ctx_on,
      logbits, log_cap) = m._span_env
+    lat_hist = st.lat_hist
+    lb = _lat_bin
     log_on = logbits is not None
     if log_on:
         log_active = ds.log_active
@@ -633,7 +635,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                                     cway, n_sets, ways, cres, cdirty,
                                     cstamp, epoch_mv, journal, chan_bus,
                                     chan_die, n_ch, t_prog, wr_busy,
-                                    channels_gc, ftl_total, ftl_reclaim)
+                                    ftl_write)
                 bnd_n += 1
                 if promoting:
                     if skybyte_count:
@@ -651,6 +653,9 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                         cclk = ds.cache_clock
                 ssd_w_n += 1
                 lat = stall + base + cache_idx + dram
+                if stall > 0.0:  # variable latency: tail-histogram it
+                    st.ssd_w_var += 1
+                    lat_hist[lb(lat)] += 1
                 lat_sum += lat
                 lat_hit_acc += lat
                 t += lat
@@ -713,7 +718,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             journal.append(p)
             ds.epoch_clock = ec
             if ev_dirty:
-                # dirty write-back: inlined Channels.write + Ftl
+                # dirty write-back: inlined Channels.write + FTL dispatch
                 ch = (vp * 1103515245 + 12345) % n_ch
                 die = chan_die[ch]
                 dd = (vp // n_ch) % DIES_PER_CHANNEL
@@ -726,10 +731,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 ds.chan_busy_ns += wr_busy
                 ds.flash_writes += 1
                 st.flash_write_pages += 1
-                ds.ftl_used += 1
-                if ds.ftl_used >= ftl_total:
-                    channels_gc(t)
-                    ds.ftl_used -= ftl_reclaim
+                ftl_write(t, vp)
             if ctx_on and est > ctx_thr:
                 st.ctx_switches += 1
                 if promoting:
@@ -769,6 +771,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             bnd_n += 1
             lat = (done - t) + base + cache_idx + dram
             miss_n += 1
+            lat_hist[lb(lat)] += 1
             lat_sum += lat
             lat_miss_acc += lat
             t += lat
@@ -905,7 +908,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
         cclk = _insert_miss(ds, st, p, False, t, cclk, csets, cway, n_sets,
                             ways, cres, cdirty, cstamp, epoch_mv, journal,
                             chan_bus, chan_die, n_ch, t_prog, wr_busy,
-                            channels_gc, ftl_total, ftl_reclaim)
+                            ftl_write)
         if ctx_on and est > ctx_thr:
             st.ctx_switches += 1
             if promoting:
@@ -945,6 +948,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
         bnd_n += 1
         lat = (done - t) + base + cache_idx + dram
         miss_n += 1
+        lat_hist[lb(lat)] += 1
         lat_sum += lat
         lat_miss_acc += lat
         t += lat
@@ -1185,6 +1189,9 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 m._maybe_promote(pgb, t)
                 lat = stall + cfg.cxl_protocol_ns + cfg.cache_index_ns \
                     + cfg.ssd_dram_ns
+                if stall > 0.0:  # variable latency: tail-histogram it
+                    m.stats.ssd_w_var += 1
+                    m.stats.lat_hist[_lat_bin(lat)] += 1
                 t += lat
                 _record(m.stats, "ssd_w", lat)
                 i += 1

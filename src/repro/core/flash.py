@@ -1,0 +1,318 @@
+"""Block-granular flash backend: FTL mapping, GC victim selection, and
+write-amplification / tail-latency accounting.
+
+The legacy ``Ftl`` in ``ssd.py`` is a free-page *counter*: GC fires at a
+utilization threshold with a fixed 8-page migration cost and a channel/die
+pick that cannot depend on what the device actually wrote. This module
+replaces it (``SimConfig.ftl_backend = "block"``, the default) with real
+erase-block state, so the write log's coalescing *measurably* reduces
+write amplification and GC-induced tail latency:
+
+  * **Geometry** — physical space is the logical page space times
+    ``1 + op_ratio`` (over-provisioning), carved into erase blocks of
+    ``pages_per_block`` pages. Every logical page is preconditioned
+    mapped (sequentially, blocks sealed), exactly like a device whose
+    data set is resident; the spare blocks are the initial free pool.
+  * **Log-structured mapping** — ``l2p``/``p2l`` plus a dense per-page
+    valid bitmap and per-block valid counts. A host program invalidates
+    the old physical slot and appends to the *host frontier* block;
+    GC migrations append to a separate *GC frontier* (hot/cold
+    separation, the standard greedy-cleaning layout).
+  * **GC victim policies** — ``gc_policy="greedy"`` picks the sealed
+    block with the fewest valid pages; ``"cost-benefit"`` ranks sealed
+    blocks by the classic (1-u)/(1+u) * age score (age in seal-sequence
+    ticks), which beats greedy when hot and cold data age at different
+    rates. Both are deterministic (NumPy argmin/argmax, first-minimal
+    tie-break).
+  * **Migration-proportional GC cost** — each collection occupies the
+    victim block's die for ``erase_ns + live * read_ns`` and writes each
+    live page through the GC frontier's channel/die (``program_ns`` +
+    bus transfer per page). Fewer live pages — what log coalescing buys —
+    means measurably shorter busy windows, which Algorithm 1's estimator
+    observes exactly like any other queued work.
+  * **Wear / WAF accounting** — per-block erase counts and a migrated-
+    page counter; ``Stats.waf`` is (host programs + migrated pages) /
+    host programs.
+
+Exactness contract with the batched engine: every flash program happens
+on a *boundary* path (dirty evictions, compaction drains, Base-CSSD
+write-allocate fills), which both engines execute through the SAME
+``on_flash_write`` method of the shared policy object at the same
+sequence points — there is nothing engine-specific to transcribe, so
+parity is structural (enforced by tests/test_flash.py and the
+tests/test_engine.py grid).
+
+Addressing note: read/program *bus and die queueing* keeps the logical
+page-interleaved striping of ``Channels`` (the paper's latency model);
+the block mapping here governs GC, wear and WAF, and GC busy windows
+land on the die derived from the victim/frontier *block* id — see
+DESIGN.md §Block-granular flash backend.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.configs.base import SimConfig
+from repro.core.device_state import DIES_PER_CHANNEL
+from repro.core.ssd import TRANSFER_NS
+
+GC_POLICIES = ("greedy", "cost-benefit")
+
+
+class FlashState:
+    """Dense block-FTL state (lives on DeviceState — single source of
+    truth for both replay engines). Scalar-hot arrays carry memoryview
+    mirrors, same trick as the rest of DeviceState."""
+
+    __slots__ = (
+        "ppb", "n_blocks", "n_phys", "reserve",
+        "l2p", "l2p_mv", "p2l", "p2l_mv",
+        "pvalid", "pvalid_mv", "blk_valid", "blk_valid_mv",
+        "blk_state", "blk_state_mv", "blk_seal", "blk_seal_mv",
+        "blk_erase", "blk_erase_mv",
+        "free", "seal_seq",
+        "host_blk", "host_slot", "gc_blk", "gc_slot",
+    )
+
+    def __init__(self, page_space: int, pages_per_block: int,
+                 op_ratio: float):
+        ppb = max(int(pages_per_block), 2)
+        lblocks = -(-page_space // ppb)  # ceil
+        # spare >= 4 blocks: two open frontiers + the 2-block GC reserve
+        # must always be coverable even at tiny test geometries
+        n_blocks = max(int(lblocks * (1.0 + op_ratio)) + 1, lblocks + 4)
+        self.ppb = ppb
+        self.n_blocks = n_blocks
+        self.n_phys = n_blocks * ppb
+        self.reserve = max(2, (n_blocks - lblocks) // 8)
+        # --- precondition: identity-map every logical page, seal those
+        # blocks (ages 1..lblocks in seal order) ---
+        self.l2p = np.full(page_space, -1, np.int64)
+        self.l2p[:] = np.arange(page_space)
+        self.p2l = np.full(self.n_phys, -1, np.int64)
+        self.p2l[:page_space] = np.arange(page_space)
+        self.pvalid = np.zeros(self.n_phys, bool)
+        self.pvalid[:page_space] = True
+        self.blk_valid = np.zeros(n_blocks, np.int64)
+        full_blocks = page_space // ppb
+        self.blk_valid[:full_blocks] = ppb
+        if full_blocks < lblocks:
+            self.blk_valid[full_blocks] = page_space - full_blocks * ppb
+        self.blk_state = np.zeros(n_blocks, np.int8)  # 0 free/1 open/2 sealed
+        self.blk_state[:lblocks] = 2
+        self.blk_seal = np.zeros(n_blocks, np.int64)
+        self.blk_seal[:lblocks] = np.arange(1, lblocks + 1)
+        self.blk_erase = np.zeros(n_blocks, np.int64)
+        self.seal_seq = lblocks
+        # free pool: pop() hands out ascending block ids
+        self.free: List[int] = list(range(n_blocks - 1, lblocks - 1, -1))
+        self.l2p_mv = memoryview(self.l2p)
+        self.p2l_mv = memoryview(self.p2l)
+        self.pvalid_mv = memoryview(self.pvalid)
+        self.blk_valid_mv = memoryview(self.blk_valid)
+        self.blk_state_mv = memoryview(self.blk_state)
+        self.blk_seal_mv = memoryview(self.blk_seal)
+        self.blk_erase_mv = memoryview(self.blk_erase)
+        self.host_blk = self.free.pop()
+        self.host_slot = 0
+        self.blk_state_mv[self.host_blk] = 1
+        self.gc_blk = self.free.pop()
+        self.gc_slot = 0
+        self.blk_state_mv[self.gc_blk] = 1
+
+
+class BlockFtl:
+    """Block-granular FTL policy over the shared FlashState.
+
+    Interface-compatible with the legacy ``ssd.Ftl``: both engines call
+    ``on_flash_write(now, page)`` once per host flash program (the
+    channel/bus timing of the program itself is charged by the caller,
+    exactly as with the legacy counter)."""
+
+    def __init__(self, cfg: SimConfig, state, channels):
+        if cfg.gc_policy not in GC_POLICIES:
+            raise ValueError(f"unknown SimConfig.gc_policy: {cfg.gc_policy!r}")
+        self.cfg = cfg
+        self.s = state
+        self.fs = state.flash
+        self.channels = channels
+        self.greedy = cfg.gc_policy == "greedy"
+        self.read_ns = cfg.flash.read_ns
+        self.program_ns = cfg.flash.program_ns
+        self.erase_ns = cfg.flash.erase_ns
+        self.n_channels = cfg.n_channels
+
+    # ---- host program path (dirty evictions, compaction flush, Base
+    # write-allocate fills) ----
+    def on_flash_write(self, now: float, page: int) -> None:
+        fs = self.fs
+        ppb = fs.ppb
+        old = fs.l2p_mv[page]
+        if old >= 0:  # invalidate the stale physical copy
+            fs.pvalid_mv[old] = False
+            fs.blk_valid_mv[old // ppb] -= 1
+            fs.p2l_mv[old] = -1
+        b = fs.host_blk
+        slot = fs.host_slot
+        pp = b * ppb + slot
+        # Install the mapping BEFORE any seal/GC: if this program fills
+        # the frontier and every earlier slot was already invalidated
+        # (rewrite-heavy locality), the just-sealed block would otherwise
+        # count zero valid pages, get picked as the GC victim, and be
+        # erased with the in-flight page's mapping still pending —
+        # silently losing the write when the slot is reallocated.
+        fs.l2p_mv[page] = pp
+        fs.p2l_mv[pp] = page
+        fs.pvalid_mv[pp] = True
+        fs.blk_valid_mv[b] += 1
+        slot += 1
+        if slot >= ppb:  # frontier sealed: GC if the pool runs low
+            fs.blk_state_mv[b] = 2
+            fs.seal_seq += 1
+            fs.blk_seal_mv[b] = fs.seal_seq
+            if len(fs.free) <= fs.reserve:
+                self._collect(now)
+            nb = self._pop_free()
+            fs.blk_state_mv[nb] = 1
+            fs.host_blk = nb
+            fs.host_slot = 0
+        else:
+            fs.host_slot = slot
+
+    def _pop_free(self) -> int:
+        """Take a block from the free pool, with a diagnosable failure:
+        at degenerate geometries (spare pool ~ the open frontiers, every
+        sealed block fully valid) GC cannot free net space and the pool
+        can starve — surface the configuration problem instead of an
+        IndexError deep in the replay loop."""
+        fs = self.fs
+        if not fs.free:
+            raise RuntimeError(
+                "block FTL spare pool exhausted: GC cannot reclaim net "
+                f"space ({fs.n_blocks} blocks x {fs.ppb} pages, reserve "
+                f"{fs.reserve}) — raise SimConfig.op_ratio or "
+                "pages_per_block for this write pattern")
+        return fs.free.pop()
+
+    # ---- garbage collection ----
+    def _collect(self, now: float) -> None:
+        fs = self.fs
+        guard = fs.n_blocks  # each round erases one block; hard bound
+        while len(fs.free) <= fs.reserve and guard > 0:
+            guard -= 1
+            if not self._gc_once(now):
+                break
+
+    def _pick_victim(self) -> int:
+        """Deterministic victim among sealed blocks (-1 if none)."""
+        fs = self.fs
+        sealed = fs.blk_state == 2
+        if not sealed.any():
+            return -1
+        if self.greedy:
+            cand = np.where(sealed, fs.blk_valid, np.int64(1 << 60))
+            return int(cand.argmin())
+        # cost-benefit: (1 - u) / (1 + u) * age, u = valid/ppb, age in
+        # seal-sequence ticks; first-maximal block index on ties
+        v = fs.blk_valid.astype(np.float64)
+        age = (fs.seal_seq - fs.blk_seal).astype(np.float64)
+        score = np.where(sealed, (fs.ppb - v) / (fs.ppb + v) * age, -1.0)
+        return int(score.argmax())
+
+    def _gc_once(self, now: float) -> bool:
+        fs = self.fs
+        s = self.s
+        b = self._pick_victim()
+        if b < 0:
+            return False
+        ppb = fs.ppb
+        if fs.blk_valid_mv[b] >= ppb and not fs.free:
+            return False  # fully-valid victim cannot free net space
+        base = b * ppb
+        live = np.flatnonzero(fs.pvalid[base:base + ppb])
+        n_live = int(live.size)
+        # victim die: erase + one read per live page; bus: the read-out
+        # transfers. Proportional to migration work, so coalesced logs
+        # (fewer live pages per victim) see measurably shorter windows.
+        ch = b % self.n_channels
+        d = (b // self.n_channels) % DIES_PER_CHANNEL
+        die = s.chan_die[ch]
+        die[d] = (now if now > die[d] else die[d]) \
+            + self.erase_ns + n_live * self.read_ns
+        bus = s.chan_bus[ch]
+        s.chan_bus[ch] = (now if now > bus else bus) \
+            + n_live * TRANSFER_NS
+        s.chan_busy_ns += self.erase_ns / DIES_PER_CHANNEL + n_live * (
+            TRANSFER_NS + self.read_ns / DIES_PER_CHANNEL)
+        # migrate live pages to the GC frontier (program timing charged
+        # per page on the frontier block's channel/die inside _alloc_gc)
+        for off in live.tolist():
+            pp_old = base + off
+            lp = fs.p2l_mv[pp_old]
+            pp_new = self._alloc_gc(now)
+            fs.l2p_mv[lp] = pp_new
+            fs.p2l_mv[pp_new] = lp
+            fs.pvalid_mv[pp_new] = True
+            fs.blk_valid_mv[pp_new // ppb] += 1
+            fs.p2l_mv[pp_old] = -1
+        s.gc_migrated_pages += n_live
+        # erase the victim back into the pool
+        fs.pvalid[base:base + ppb] = False
+        fs.blk_valid_mv[b] = 0
+        fs.blk_erase_mv[b] += 1
+        fs.blk_state_mv[b] = 0
+        fs.free.append(b)
+        s.gc_events += 1
+        return True
+
+    def _alloc_gc(self, now: float) -> int:
+        """Next GC-frontier slot + its program's channel/bus/die time.
+        Never triggers GC itself: _collect runs with free > reserve - 1
+        >= 1 and one migration seals the GC frontier at most once."""
+        fs = self.fs
+        s = self.s
+        ppb = fs.ppb
+        b = fs.gc_blk
+        slot = fs.gc_slot
+        pp = b * ppb + slot
+        slot += 1
+        if slot >= ppb:
+            fs.blk_state_mv[b] = 2
+            fs.seal_seq += 1
+            fs.blk_seal_mv[b] = fs.seal_seq
+            nb = self._pop_free()
+            fs.blk_state_mv[nb] = 1
+            fs.gc_blk = nb
+            fs.gc_slot = 0
+        else:
+            fs.gc_slot = slot
+        ch = b % self.n_channels
+        d = (b // self.n_channels) % DIES_PER_CHANNEL
+        bus = s.chan_bus[ch]
+        s.chan_bus[ch] = (now if now > bus else bus) + TRANSFER_NS
+        die = s.chan_die[ch]
+        die[d] = (now if now > die[d] else die[d]) + self.program_ns
+        s.chan_busy_ns += TRANSFER_NS + self.program_ns / DIES_PER_CHANNEL
+        return pp
+
+
+def check_invariants(fs: FlashState) -> None:
+    """Assert the valid-count / bitmap / mapping invariants (test hook)."""
+    ppb = fs.ppb
+    per_block = fs.pvalid.reshape(fs.n_blocks, ppb).sum(axis=1)
+    assert (per_block == fs.blk_valid).all(), "blk_valid != bitmap sums"
+    mapped = np.flatnonzero(fs.l2p >= 0)
+    assert int(fs.blk_valid.sum()) == mapped.size, "valid total != mapped"
+    pp = fs.l2p[mapped]
+    assert fs.pvalid[pp].all(), "mapped physical slots must be valid"
+    assert (fs.p2l[pp] == mapped).all(), "l2p/p2l must be inverse"
+    free_set = set(fs.free)
+    assert len(free_set) == len(fs.free), "duplicate blocks in free pool"
+    for b in range(fs.n_blocks):
+        st = int(fs.blk_state[b])
+        assert (b in free_set) == (st == 0), "free pool vs blk_state drift"
+        if st == 0:
+            assert int(fs.blk_valid[b]) == 0, "free block holds valid pages"
+    assert fs.blk_state[fs.host_blk] == 1 and fs.blk_state[fs.gc_blk] == 1

@@ -52,31 +52,107 @@ import numpy as np
 
 from repro.configs.base import SimConfig
 from repro.core.device_state import DeviceState
+from repro.core.flash import BlockFtl
 from repro.core.ssd import Channels, DataCache, Ftl, WriteLog
 from repro.core.traces import gen_traces
 
 PAGE = 4096
 LINE = 64
 
+# ---------------------------------------------------------------------------
+# Per-request latency distribution. Most retired requests have one of a
+# handful of *constant* latencies (host DRAM hit, log hit, cache hit, log
+# append) whose exact values and counts the Stats counters already carry;
+# only flash read misses and MSHR-stalled Base-CSSD write misses vary.
+# Those variable latencies go into a log-scale histogram (8 sub-bins per
+# octave, ~4.5% bin width), and p50/p95/p99 are computed exactly over the
+# merged multiset — so the common percentiles usually land on a constant
+# class and are reported exactly, while deep-tail values are quantized to
+# the bin edge. Both engines bump the histogram at the same retire points
+# with identical latencies, so it is bit-identical by construction.
+# ---------------------------------------------------------------------------
+
+_LAT_NBINS = 512
+
+
+def _lat_bin(lat: float) -> int:
+    """Histogram bin of one latency (ns): 8 log-scale sub-bins/octave."""
+    v = int(lat)
+    if v < 8:
+        return v if v > 0 else 0
+    e = v.bit_length() - 1
+    b = (e << 3) | ((v >> (e - 3)) & 7)
+    return b if b < _LAT_NBINS else _LAT_NBINS - 1
+
+
+def _lat_bin_edge(b: int) -> float:
+    """Lower edge (ns) of histogram bin b — the reported tail value."""
+    if b < 8:
+        return float(b)
+    e = b >> 3
+    return float((1 << e) + ((b & 7) << (e - 3)))
+
 
 class Stats:
     __slots__ = (
         "n", "host_r", "host_w", "hit_log", "hit_cache", "miss_flash", "ssd_w",
         "lat_sum", "lat_host", "lat_hit", "lat_miss", "ctx_switches",
-        "flash_write_pages", "gc_events", "promotions", "demotions",
+        "flash_write_pages", "gc_events", "gc_migrated_pages", "waf",
+        "promotions", "demotions",
         "exec_ns", "busy_ns", "replays",
+        "lat_p50_ns", "lat_p95_ns", "lat_p99_ns",
+        # variable-latency bookkeeping (lat_hist is engine-internal: the
+        # percentiles above are its exported summary)
+        "ssd_w_var", "lat_hist",
     )
 
     def __init__(self):
         for f in self.__slots__:
             setattr(self, f, 0)
+        self.lat_hist = np.zeros(_LAT_NBINS, np.int64)
 
     def as_dict(self) -> Dict[str, Any]:
-        d = {f: getattr(self, f) for f in self.__slots__}
+        d = {f: getattr(self, f) for f in self.__slots__ if f != "lat_hist"}
         n = max(self.n, 1)
         d["amat_ns"] = self.lat_sum / n
         d["flash_write_bytes"] = self.flash_write_pages * PAGE
         return d
+
+    def finalize(self, cfg: SimConfig, ds: DeviceState) -> None:
+        """Fold device-state accounting into the exported stats: WAF,
+        migrated pages, and the exact latency percentiles. Pure function
+        of counters both engines produce identically."""
+        self.gc_migrated_pages = ds.gc_migrated_pages
+        fw = ds.flash_writes
+        self.waf = (fw + ds.gc_migrated_pages) / fw if fw else 1.0
+        lat_log = cfg.cxl_protocol_ns + cfg.log_index_ns + cfg.ssd_dram_ns
+        lat_cache = cfg.cxl_protocol_ns + cfg.cache_index_ns + cfg.ssd_dram_ns
+        ssd_w_const = self.ssd_w - self.ssd_w_var
+        items = [
+            (cfg.host_dram_ns, self.host_r + self.host_w),
+            (lat_log, self.hit_log
+             + (ssd_w_const if cfg.enable_write_log else 0)),
+            (lat_cache, self.hit_cache
+             + (0 if cfg.enable_write_log else ssd_w_const)),
+        ]
+        items.extend((_lat_bin_edge(b), int(c))
+                     for b, c in enumerate(self.lat_hist.tolist()) if c)
+        items = sorted(it for it in items if it[1] > 0)
+        total = self.n
+        for field, q in (("lat_p50_ns", 0.50), ("lat_p95_ns", 0.95),
+                         ("lat_p99_ns", 0.99)):
+            if not total:
+                setattr(self, field, 0.0)
+                continue
+            rank = max(int(np.ceil(q * total)), 1)
+            cum = 0
+            val = items[-1][0] if items else 0.0
+            for v, c in items:
+                cum += c
+                if cum >= rank:
+                    val = v
+                    break
+            setattr(self, field, float(val))
 
 
 class Thread:
@@ -114,7 +190,12 @@ class Machine:
             page_space = max(cfg.n_flash_pages, 1)
         self.state = DeviceState(cfg, page_space)
         self.channels = Channels(cfg, self.state)
-        self.ftl = Ftl(cfg, self.state, self.channels)
+        # block-granular FTL (core/flash.py) unless the legacy free-page
+        # counter is requested; both expose on_flash_write(now, page)
+        if self.state.flash is not None:
+            self.ftl = BlockFtl(cfg, self.state, self.channels)
+        else:
+            self.ftl = Ftl(cfg, self.state, self.channels)
         self.cache = DataCache(cfg, self.state)
         self.log = WriteLog(cfg, self.state) if cfg.enable_write_log else None
         self.host = self.state.host
@@ -163,7 +244,7 @@ class Machine:
     def _handle_evict(self, ev, now: float) -> None:
         if ev is not None and ev[1]:  # dirty page writeback
             self.channels.write(ev[0], now)
-            self.ftl.on_flash_write(now)
+            self.ftl.on_flash_write(now, ev[0])
             self.stats.flash_write_pages += 1
 
     # ---- compaction (§III-B) ----
@@ -180,7 +261,7 @@ class Machine:
             if self.cache.lookup(page, touch=False) is None:
                 self.channels.read(page, now)  # coalescing-buffer fill
             self.channels.write(page, now)
-            self.ftl.on_flash_write(now)
+            self.ftl.on_flash_write(now, page)
             self.stats.flash_write_pages += 1
             st.log_flushed_pages += 1
             st.log_flushed_lines += len(lines)
@@ -238,6 +319,9 @@ class Machine:
             self._handle_evict(ev, now)
             self._maybe_promote(page, now)
             lat = stall + base + cfg.cache_index_ns + cfg.ssd_dram_ns
+            if stall > 0.0:  # variable latency: tail-histogram it
+                st.ssd_w_var += 1
+                st.lat_hist[_lat_bin(lat)] += 1
             return lat, None, "ssd_w"
 
         # ---- read ----
@@ -290,6 +374,7 @@ def _record(st: Stats, cls: str, lat: float) -> None:
     else:
         st.miss_flash += 1
         st.lat_miss += lat
+        st.lat_hist[_lat_bin(lat)] += 1
 
 
 def _replay_prologue(m: Machine, cfg: SimConfig, th: Thread, t: float):
@@ -474,7 +559,11 @@ def simulate(
     st.exec_ns = exec_ns
     st.busy_ns = ds.chan_busy_ns
     st.gc_events = ds.gc_events
+    st.finalize(cfg, ds)
     out = st.as_dict()
+    if ds.flash is not None:  # block FTL wear accounting
+        out["wear_max_erases"] = int(ds.flash.blk_erase.max())
+        out["wear_mean_erases"] = float(ds.flash.blk_erase.mean())
     out.update(
         workload=workload, variant=variant, n_threads=cfg.n_threads,
         n_req_per_thread=n_req,

@@ -105,27 +105,33 @@ class Channels:
 
     def gc(self, now: float) -> None:
         """Occupy one die with erase + valid-page migration (plus bus time
-        for the migrated pages)."""
+        for the migrated pages). Channel and die advance on decorrelated
+        strides: the historical ``gc_events % DIES_PER_CHANNEL`` die pick
+        moved in lockstep with the channel pick, so only the 64 diagonal
+        (ch, die) pairs out of 1024 ever absorbed GC work."""
         cfg = self.cfg
         s = self.s
         ch = s.gc_events % cfg.n_channels
-        d = s.gc_events % DIES_PER_CHANNEL
+        d = (s.gc_events // cfg.n_channels) % DIES_PER_CHANNEL
         cost = cfg.flash.erase_ns + 8 * (cfg.flash.read_ns + cfg.flash.program_ns)
         s.chan_die[ch][d] = max(now, s.chan_die[ch][d]) + cost
         s.chan_bus[ch] = max(now, s.chan_bus[ch]) + 8 * TRANSFER_NS
         s.chan_busy_ns += cost / DIES_PER_CHANNEL
         s.gc_events += 1
+        s.gc_migrated_pages += 8  # the fixed migration the cost models
 
 
 class Ftl:
-    """Free-page accounting driving the GC model."""
+    """Legacy free-page accounting driving the GC model
+    (``SimConfig.ftl_backend = "legacy"``; the default block-granular
+    backend lives in ``core/flash.py`` and shares this interface)."""
 
     def __init__(self, cfg: SimConfig, state: DeviceState, channels: Channels):
         self.cfg = cfg
         self.s = state
         self.channels = channels
 
-    def on_flash_write(self, now: float) -> None:
+    def on_flash_write(self, now: float, page: int = -1) -> None:
         s = self.s
         s.ftl_used += 1  # out-of-place update consumes a free page
         if s.ftl_used >= s.ftl_total:
