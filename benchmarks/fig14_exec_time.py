@@ -1,5 +1,12 @@
 """Fig 14: normalized end-to-end execution time of all SkyByte variants vs
-Base-CSSD (paper: SkyByte-Full 6.11x mean speedup, 75% of DRAM-Only)."""
+Base-CSSD (paper: SkyByte-Full 6.11x mean speedup, 75% of DRAM-Only).
+
+Since the physical-routing refactor the exec-time story carries a GC
+attribution: reads queue on the die the FTL actually placed their page
+on, so time spent waiting behind GC-carved die windows is accounted per
+request (gc_pause_ms = summed host-observed GC wait across all threads;
+gc_pause_frac normalizes by exec time — it can exceed 1 when several
+threads stall on GC concurrently)."""
 from __future__ import annotations
 
 import numpy as np
@@ -20,6 +27,10 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                 "speedup": round(base["exec_ns"] / r["exec_ns"], 3),
                 "ssd_bw_util": round(r["ssd_bw_util"], 4),
                 "ctx_switches": r["ctx_switches"],
+                "gc_pause_ms": round(r["gc_pause_ns_total"] / 1e6, 3),
+                "gc_pause_frac": round(
+                    r["gc_pause_ns_total"] / max(r["exec_ns"], 1), 4),
+                "gc_stalls": r["gc_stall_events"],
             })
     full = [r["speedup"] for r in rows if r["variant"] == "skybyte-full"]
     dram = [r["speedup"] for r in rows if r["variant"] == "dram-only"]
@@ -44,7 +55,8 @@ def main(total_req: int = TOTAL_REQ, force: bool = False):
     rows = run(total_req, force)
     print_csv("fig14_exec_time (paper: Full=6.11x geomean, 75% of DRAM-Only)",
               rows, ["workload", "variant", "exec_ms", "norm_exec", "speedup",
-                     "ssd_bw_util", "ctx_switches"])
+                     "ssd_bw_util", "ctx_switches", "gc_pause_ms",
+                     "gc_pause_frac", "gc_stalls"])
     return rows
 
 

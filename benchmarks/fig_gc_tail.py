@@ -1,13 +1,24 @@
 """GC / tail-latency figure (beyond-paper): over-provisioning x GC-policy
-sweep on the block-granular flash backend (core/flash.py).
+sweep plus a wear-leveling x hot/cold-frontier placement sweep on the
+block-granular flash backend (core/flash.py).
 
 The paper's headline mechanisms are motivated by "unpredictable events
 such as garbage collection"; this section quantifies that regime
-directly. For each (workload, variant) it sweeps the physical
-over-provisioning ratio and the GC victim policy and reports device
-write amplification (WAF), migrated-page volume, and the request latency
-tail (p50/p95/p99) — the tail is where GC-induced die-busy windows show
-up, and where the coordinated context switch + write-log coalescing pay.
+directly. Two sweeps:
+
+  * ``op`` rows — for each (workload, variant) the physical
+    over-provisioning ratio and the GC victim policy, reporting device
+    write amplification (WAF), migrated-page volume, the request latency
+    tail (p50/p95/p99) and the host-observed GC-pause attribution — with
+    physical routing, the tail is where GC-induced die-busy windows show
+    up, and where the coordinated context switch + write-log coalescing
+    pay.
+  * ``wear`` rows — at the default (GC-live) over-provisioning, the
+    ``wear_leveling`` x ``hotcold`` placement-policy grid, with
+    wear-spread rows (max/mean per-block erases): wear-aware free-block
+    picks flatten the spread LIFO recycling concentrates; hot/cold
+    frontier separation lowers migration volume by letting hot pages die
+    together.
 """
 from __future__ import annotations
 
@@ -24,11 +35,36 @@ WLS = ("srad", "dlrm")
 VARIANTS = ("base-cssd", "skybyte-w", "skybyte-full")
 OP_RATIOS = (0.03, 0.125, 0.25)
 GC_POLICIES = ("greedy", "cost-benefit")
+# wear sweep: default OP (GC live), greedy victims, the placement grid
+WEAR_VARIANTS = ("base-cssd", "skybyte-full")
+WEAR_GRID = ((False, False), (True, False), (False, True), (True, True))
+
+
+def _row(wl, v, r, **extra):
+    wear_mean = r.get("wear_mean_erases", 0)
+    row = {
+        "workload": wl, "variant": v,
+        "op_ratio": "", "gc_policy": "",
+        "wear_leveling": "", "hotcold": "",
+        "waf": round(r["waf"], 3),
+        "gc_events": r["gc_events"],
+        "gc_migrated_pages": r["gc_migrated_pages"],
+        "flash_write_MB": round(r["flash_write_bytes"] / 1e6, 3),
+        "wear_max_erases": r.get("wear_max_erases", 0),
+        "wear_spread": round(r.get("wear_max_erases", 0) / wear_mean, 2)
+        if wear_mean else 0.0,
+        "gc_pause_ms": round(r["gc_pause_ns_total"] / 1e6, 3),
+        "lat_p50_ns": round(r["lat_p50_ns"], 1),
+        "lat_p95_ns": round(r["lat_p95_ns"], 1),
+        "lat_p99_ns": round(r["lat_p99_ns"], 1),
+    }
+    row.update(extra)
+    return row
 
 
 def run(total_req: int = TOTAL_REQ, force: bool = False):
     rows = []
-    for wl in WLS:
+    for wl in WLS:  # --- over-provisioning x victim policy ---
         for v in VARIANTS:
             for op in OP_RATIOS:
                 for pol in GC_POLICIES:
@@ -36,19 +72,17 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                                               gc_policy=pol)
                     r = cached_sim(wl, v, cfg=cfg, total_req=total_req,
                                    force=force)
-                    rows.append({
-                        "workload": wl, "variant": v,
-                        "op_ratio": op, "gc_policy": pol,
-                        "waf": round(r["waf"], 3),
-                        "gc_events": r["gc_events"],
-                        "gc_migrated_pages": r["gc_migrated_pages"],
-                        "flash_write_MB": round(
-                            r["flash_write_bytes"] / 1e6, 3),
-                        "wear_max_erases": r.get("wear_max_erases", 0),
-                        "lat_p50_ns": round(r["lat_p50_ns"], 1),
-                        "lat_p95_ns": round(r["lat_p95_ns"], 1),
-                        "lat_p99_ns": round(r["lat_p99_ns"], 1),
-                    })
+                    rows.append(_row(wl, v, r, op_ratio=op, gc_policy=pol))
+    for wl in WLS:  # --- wear_leveling x hotcold placement grid ---
+        for v in WEAR_VARIANTS:
+            for wear, hc in WEAR_GRID:
+                cfg = dataclasses.replace(SimConfig(), wear_leveling=wear,
+                                          hotcold=hc)
+                r = cached_sim(wl, v, cfg=cfg, total_req=total_req,
+                               force=force)
+                rows.append(_row(wl, v, r, op_ratio=cfg.op_ratio,
+                                gc_policy=cfg.gc_policy,
+                                wear_leveling=int(wear), hotcold=int(hc)))
     return rows
 
 
@@ -59,12 +93,13 @@ def cells(total_req: int = TOTAL_REQ):
 
 def main(total_req: int = TOTAL_REQ, force: bool = False):
     rows = run(total_req, force)
-    print_csv("fig_gc_tail (block FTL: over-provisioning x GC policy, "
-              "WAF + latency tail)",
-              rows, ["workload", "variant", "op_ratio", "gc_policy", "waf",
-                     "gc_events", "gc_migrated_pages", "flash_write_MB",
-                     "wear_max_erases", "lat_p50_ns", "lat_p95_ns",
-                     "lat_p99_ns"])
+    print_csv("fig_gc_tail (block FTL: over-provisioning x GC policy + "
+              "wear_leveling x hotcold, WAF + wear spread + latency tail)",
+              rows, ["workload", "variant", "op_ratio", "gc_policy",
+                     "wear_leveling", "hotcold", "waf", "gc_events",
+                     "gc_migrated_pages", "flash_write_MB",
+                     "wear_max_erases", "wear_spread", "gc_pause_ms",
+                     "lat_p50_ns", "lat_p95_ns", "lat_p99_ns"])
     return rows
 
 

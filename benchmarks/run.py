@@ -130,6 +130,13 @@ def main(argv=None) -> None:
                     help="skip the engine-throughput calibration runs")
     args = ap.parse_args(argv)
     only = {s.strip() for s in args.only.split(",") if s.strip()}
+    # a typo'd section name used to run NOTHING silently; fail loudly with
+    # the registered names instead
+    valid = {name for name, _, _, _ in SECTIONS} | {"roofline"}
+    unknown = sorted(only - valid)
+    if unknown:
+        ap.error(f"unknown --only section(s): {', '.join(unknown)}; "
+                 f"valid sections: {', '.join(sorted(valid))}")
 
     if args.jobs <= 0:
         phys = common.physical_cores()

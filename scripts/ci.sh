@@ -10,6 +10,7 @@
 #   bash scripts/ci.sh tests      # tier-1 pytest only
 #   bash scripts/ci.sh ref        # simulator tests on the reference engine
 #   bash scripts/ci.sh gc         # block-FTL GC/tail figure in quick mode
+#   bash scripts/ci.sh addr       # physical-routing parity (engines x FTLs)
 #   bash scripts/ci.sh bench      # orchestrator smoke + baseline diff
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -56,6 +57,16 @@ rows = fig_gc_tail.main(total_req=200_000)
 assert rows, "fig_gc_tail produced no rows"
 assert any(r["gc_events"] > 0 for r in rows), "GC never engaged in sweep"
 PY
+fi
+
+if [[ "$STAGE" == "all" || "$STAGE" == "addr" ]]; then
+  echo "== physical-address routing parity (both engines, both FTL backends) =="
+  # The l2p-routed service path: resolver/legacy-hash anchors, routing
+  # divergence after GC relocation, placement-policy (wear_leveling x
+  # hotcold) storm parity, and the l2p agreement property sweep. The
+  # routing tests drive BOTH engines explicitly per test; the legacy
+  # tests pin the ftl_backend="legacy" anchor.
+  python -m pytest -x -q tests/test_flash.py -k "routing or legacy"
 fi
 
 if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then

@@ -285,8 +285,14 @@ class SimConfig:
     # --- block-granular flash backend (core/flash.py) ---
     # "block": erase-block FTL with log-structured page mapping, dense
     #   valid bitmaps, victim-policy GC whose cost is proportional to the
-    #   victim's live pages, and wear/WAF accounting (the default).
-    # "legacy": the free-page counter with fixed 8-page GC cost.
+    #   victim's live pages, and wear/WAF accounting (the default). Every
+    #   read and program resolves its channel/die from the PHYSICAL
+    #   location the FTL chose (block-id-derived; see flash.blk_loc), so
+    #   GC storms, wear leveling and hot/cold placement are visible in
+    #   service latency, not only in WAF side-channels.
+    # "legacy": the free-page counter with fixed 8-page GC cost and the
+    #   original logical page-hash striping (Channels.logical_loc) —
+    #   bit-exact PR 4 routing, kept as the regression anchor.
     ftl_backend: str = "block"
     pages_per_block: int = 64  # erase-block size in (4KB) pages
     # Physical over-provisioning: phys pages = logical * (1 + op_ratio).
@@ -298,6 +304,31 @@ class SimConfig:
     # sweeps this knob upward).
     op_ratio: float = 0.03
     gc_policy: str = "greedy"  # "greedy" | "cost-benefit"
+    # Wear-aware free-block allocation: sealed frontiers draw their
+    # replacement from the free pool by LOWEST erase count (block-id
+    # tie-break) instead of LIFO pop. LIFO recycles the handful of
+    # recently-erased blocks back-to-back, so a rewrite-heavy working set
+    # concentrates erases on a few blocks (wear_max_erases >> mean);
+    # lowest-erase picks rotate the whole spare pool and flatten the
+    # spread (fig_gc_tail's wear rows sweep this knob). Off by default:
+    # the LIFO pick is the PR 4 behaviour and keeps the headline grid's
+    # placement anchored.
+    wear_leveling: bool = False
+    # Hot/cold write frontiers: host programs split across TWO open host
+    # frontier blocks by rewrite heat — a program is "hot" (lands on the
+    # hot frontier) when its previous physical copy still sits in an OPEN
+    # block OR in one sealed within the last heat_win seal ticks
+    # (heat_win = max(8, data_blocks/4), flash.FlashState: the page's
+    # rewrite interval is short relative to the data set — eviction- and
+    # compaction-driven rewrite intervals span many blocks, so an
+    # open-block-only test would classify nearly everything cold).
+    # Everything else goes cold. Hot pages die together, so hot blocks
+    # seal near-fully-invalid (cheap GC victims) while cold blocks stay
+    # valid and untouched — the classic greedy-cleaning hot/cold
+    # separation, now observable end-to-end because reads route to the
+    # physical die the frontier chose. Off by default (single host
+    # frontier, PR 4 layout).
+    hotcold: bool = False
     # --- context switch (paper §III-A) ---
     ctx_switch_ns: float = 2_000.0
     ctx_threshold_ns: float = 2_000.0

@@ -33,6 +33,13 @@ cheaper than NumPy scalar indexing); the ndarray views are what the vector
 path fancy-indexes. Channel/die busy timelines are plain Python float
 lists: they are only ever touched scalar-wise (per flash op), where lists
 beat any NumPy representation.
+
+The address-resolution tables both engines consult live here too: the
+block FTL's ``flash.l2p`` mapping (physical service-path routing — every
+read/program derives its channel/die from the block the FTL placed the
+page in) and ``gc_die_until``, the per-die horizon up to which a die's
+busy window is GC-induced (drives the host-observed GC-pause attribution
+in Stats).
 """
 from __future__ import annotations
 
@@ -104,6 +111,15 @@ class DeviceState:
         # flash channels / dies
         "chan_bus", "chan_die", "chan_busy_ns",
         "flash_reads", "flash_writes", "gc_events", "gc_migrated_pages",
+        # GC-pause visibility: the last GC-carved busy window per die
+        # ([gc_die_from, gc_die_until]; contiguous GC extensions merge),
+        # plus the host-observed attribution counters (bumped at every
+        # flash-read issue whose wait overlaps such a window — identically
+        # by both engines; see Channels.read and the inline span's
+        # mirrored sites). Recording the window START keeps wait that was
+        # already queued behind host programs out of the attribution.
+        "gc_die_from", "gc_die_until", "gc_pause_ns_total",
+        "gc_pause_max_ns", "gc_stall_events",
         # FTL: legacy free-page accounting + block-granular backend state
         "ftl_total", "ftl_used", "flash",
         # promotion counters
@@ -160,6 +176,13 @@ class DeviceState:
         self.flash_writes = 0
         self.gc_events = 0
         self.gc_migrated_pages = 0
+        self.gc_die_from = [[0.0] * DIES_PER_CHANNEL
+                            for _ in range(cfg.n_channels)]
+        self.gc_die_until = [[0.0] * DIES_PER_CHANNEL
+                             for _ in range(cfg.n_channels)]
+        self.gc_pause_ns_total = 0.0
+        self.gc_pause_max_ns = 0.0
+        self.gc_stall_events = 0
         # --- FTL ---
         self.ftl_total = max(cfg.n_flash_pages, 1)
         self.ftl_used = int(self.ftl_total * cfg.gc_threshold)  # preconditioned
@@ -167,7 +190,7 @@ class DeviceState:
             from repro.core.flash import FlashState
 
             self.flash = FlashState(page_space, cfg.pages_per_block,
-                                    cfg.op_ratio)
+                                    cfg.op_ratio, cfg.hotcold)
         elif cfg.ftl_backend == "legacy":
             self.flash = None
         else:

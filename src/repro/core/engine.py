@@ -44,7 +44,11 @@ against ARE the device state, mutated through the ssd.py policy views.
     executed by an exact transcription inside this module, against the
     shared state, in ``Machine.serve()``'s operation order to the letter.
     ``serve()`` itself is never called by this engine — it survives as the
-    reference loop's per-event oracle only.
+    reference loop's per-event oracle only. Flash service locations are
+    resolved from the LIVE l2p mapping at every boundary (``m.loc_of`` /
+    the span's inlined block-id derivation): mapping changes only ever
+    happen on boundary paths, so the cached classification codes — which
+    never encode placement — stay untouched by physical routing.
   * **Inline spans** — when observed fast-run lengths drop below the cache
     break-even (``SimConfig.cls_cache_min_run``; boundary-dense phases
     such as Base-CSSD write storms), the engine switches to the tuned
@@ -211,13 +215,16 @@ class BatchedMachine(Machine):
             cfg.host_dram_ns, base, cfg.cache_index_ns, cfg.ssd_dram_ns,
             lat_log, lat_cache, cfg.ctx_switch_ns, cfg.ctx_threshold_ns,
             ds.chan_bus, ds.chan_die, cfg.n_channels, cfg.flash.read_ns,
-            cfg.flash.program_ns,
             TRANSFER_NS + cfg.flash.read_ns / DIES_PER_CHANNEL,
-            TRANSFER_NS + cfg.flash.program_ns / DIES_PER_CHANNEL,
             self.ftl.on_flash_write,
             cfg.max_outstanding, cfg.enable_ctx_switch,
             memoryview(ds.log_bits) if cfg.enable_write_log else None,
             ds.log_cap,
+            # physical service-path routing (None/0 under the legacy
+            # backend: the span then uses the logical hash stripe inline)
+            ds.flash.l2p_mv if ds.flash is not None else None,
+            ds.flash.ppb if ds.flash is not None else 0,
+            ds.gc_die_from, ds.gc_die_until,
         )
 
     def _columns(self, th: Thread):
@@ -440,14 +447,16 @@ def _apply_prefix(m: BatchedMachine, cfg: SimConfig, th: Thread,
 
 
 def _insert_miss(ds, st, p, dirty, t, cclk, csets, cway, n_sets, ways, cres,
-                 cdirty, cstamp, epoch_mv, journal, chan_bus, chan_die,
-                 n_ch, t_prog, wr_busy, ftl_write):
+                 cdirty, cstamp, epoch_mv, journal, ftl_write):
     """Inlined DataCache.insert (page known non-resident) + dirty-victim
-    write-back (Machine._handle_evict: Channels.write + ftl.on_flash_write
-    — the block FTL's mapping/GC or the legacy counter, dispatched once
-    per program) over the shared state — the exact operation order and
-    float expressions of the methods it replaces, minus their dispatch.
-    ``cclk`` is the caller's hoisted LRU clock; returns its new value.
+    write-back (Machine._handle_evict) over the shared state — the exact
+    operation order of the methods it replaces, minus their dispatch.
+    The write-back itself is ONE ``ftl_write`` dispatch: since the
+    physical-routing refactor ``on_flash_write`` performs the whole
+    program (destination resolution, bus/die timing at the frontier the
+    FTL chose, mapping, GC) in both backends, so there is no timing code
+    left to inline here. ``cclk`` is the caller's hoisted LRU clock;
+    returns its new value.
 
     KEEP IN SYNC: the no-log span's flash-read-miss block repeats this
     body verbatim (dirty=False) — at that site, the hottest miss path in
@@ -490,20 +499,8 @@ def _insert_miss(ds, st, p, dirty, t, cclk, csets, cway, n_sets, ways, cres,
     journal.append(p)
     ds.epoch_clock = ec
     if ev_dirty:
-        # dirty write-back: inlined Channels.write + the FTL dispatch
-        ch = (vp * 1103515245 + 12345) % n_ch
-        die = chan_die[ch]
-        dd = (vp // n_ch) % DIES_PER_CHANNEL
-        bv = chan_bus[ch]
-        xfer = (t if t > bv else bv) + TRANSFER_NS
-        chan_bus[ch] = xfer
-        dv = die[dd]
-        done = (xfer if xfer > dv else dv) + t_prog
-        die[dd] = done
-        ds.chan_busy_ns += wr_busy
-        ds.flash_writes += 1
+        ftl_write(t, vp)  # full program: timing + mapping + GC
         st.flash_write_pages += 1
-        ftl_write(t, vp)
     return cclk
 
 
@@ -538,9 +535,10 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
     (maybe_promote, compact, host, move_host, cres, cdirty, cstamp, csets,
      cway, n_sets, ways, epoch_mv, journal, promoting, skybyte_count, acc,
      promo_thr, lat_host, base, cache_idx, dram, lat_log, lat_cache,
-     ctx_ns, ctx_thr, chan_bus, chan_die, n_ch, t_read, t_prog, rd_busy,
-     wr_busy, ftl_write, max_out, ctx_on,
-     logbits, log_cap) = m._span_env
+     ctx_ns, ctx_thr, chan_bus, chan_die, n_ch, t_read, rd_busy,
+     ftl_write, max_out, ctx_on, logbits, log_cap,
+     l2p, ppb, gc_from, gc_until) = m._span_env
+    block_route = l2p is not None
     lat_hist = st.lat_hist
     lb = _lat_bin
     log_on = logbits is not None
@@ -617,12 +615,21 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                     wslots.remove(oldest)
                     if oldest > t:
                         stall = oldest - t
-                # inlined Channels.read at now = t + stall
-                ch = (p * 1103515245 + 12345) % n_ch
+                # resolved location (physical placement under the block
+                # FTL, logical hash stripe under legacy), then inlined
+                # Channels.read at now = t + stall
+                if block_route:
+                    blk = l2p[p] // ppb
+                    ch = blk % n_ch
+                    dd = (blk // n_ch) % DIES_PER_CHANNEL
+                else:
+                    ch = (p * 1103515245 + 12345) % n_ch
+                    dd = (p // n_ch) % DIES_PER_CHANNEL
                 die = chan_die[ch]
-                dd = (p // n_ch) % DIES_PER_CHANNEL
                 now2 = t + stall
                 dv = die[dd]
+                # background fetch: no GC-pause attribution (gc_attr=False
+                # in the serve() path this transcribes)
                 sensed = (dv if dv > now2 else now2) + t_read
                 bv = chan_bus[ch]
                 done = (sensed if sensed > bv else bv) + TRANSFER_NS
@@ -633,9 +640,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 wslots.append(done)
                 cclk = _insert_miss(ds, st, p, True, t, cclk, csets,
                                     cway, n_sets, ways, cres, cdirty,
-                                    cstamp, epoch_mv, journal, chan_bus,
-                                    chan_die, n_ch, t_prog, wr_busy,
-                                    ftl_write)
+                                    cstamp, epoch_mv, journal, ftl_write)
                 bnd_n += 1
                 if promoting:
                     if skybyte_count:
@@ -662,10 +667,19 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 continue
             # ---- flash read miss (transcribed from serve(); when the
             # coordinated context switch is on, Algorithm 1's estimator
-            # decides between parking the thread and serving inline) ----
-            ch = (p * 1103515245 + 12345) % n_ch
+            # decides between parking the thread and serving inline).
+            # The location is the page's PHYSICAL placement under the
+            # block FTL (live l2p — mapping changes only ever happen on
+            # boundary paths like this one), the logical stripe under
+            # legacy. ----
+            if block_route:
+                blk = l2p[p] // ppb
+                ch = blk % n_ch
+                dd = (blk // n_ch) % DIES_PER_CHANNEL
+            else:
+                ch = (p * 1103515245 + 12345) % n_ch
+                dd = (p // n_ch) % DIES_PER_CHANNEL
             die = chan_die[ch]
-            dd = (p // n_ch) % DIES_PER_CHANNEL
             dv = die[dd]
             bv = chan_bus[ch]
             if ctx_on:  # inlined Channels.estimate (pre-issue state)
@@ -673,6 +687,18 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 bw = bv - t
                 wait = dw if dw > bw else bw
                 est = (wait if wait > 0.0 else 0.0) + t_read
+            if dv > t:  # GC-pause attribution (Channels.read mirror)
+                gu = gc_until[ch][dd]
+                if gu > t:
+                    gf = gc_from[ch][dd]
+                    lo = t if t > gf else gf
+                    hi = dv if dv < gu else gu
+                    pause = hi - lo
+                    if pause > 0.0:
+                        ds.gc_stall_events += 1
+                        ds.gc_pause_ns_total += pause
+                        if pause > ds.gc_pause_max_ns:
+                            ds.gc_pause_max_ns = pause
             # inlined Channels.read
             sensed = (dv if dv > t else t) + t_read
             done = (sensed if sensed > bv else bv) + TRANSFER_NS
@@ -718,20 +744,8 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             journal.append(p)
             ds.epoch_clock = ec
             if ev_dirty:
-                # dirty write-back: inlined Channels.write + FTL dispatch
-                ch = (vp * 1103515245 + 12345) % n_ch
-                die = chan_die[ch]
-                dd = (vp // n_ch) % DIES_PER_CHANNEL
-                bv = chan_bus[ch]
-                xfer = (t if t > bv else bv) + TRANSFER_NS
-                chan_bus[ch] = xfer
-                dv = die[dd]
-                wb_done = (xfer if xfer > dv else dv) + t_prog
-                die[dd] = wb_done
-                ds.chan_busy_ns += wr_busy
-                ds.flash_writes += 1
+                ftl_write(t, vp)  # full program: timing + mapping + GC
                 st.flash_write_pages += 1
-                ftl_write(t, vp)
             if ctx_on and est > ctx_thr:
                 st.ctx_switches += 1
                 if promoting:
@@ -887,10 +901,17 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             continue
         # ---- flash read miss (transcribed from serve(); when the
         # coordinated context switch is on, Algorithm 1's estimator decides
-        # between parking the thread and serving the miss inline) ----
-        ch = (p * 1103515245 + 12345) % n_ch
+        # between parking the thread and serving the miss inline). The
+        # location is the page's physical placement (live l2p) under the
+        # block FTL, the logical hash stripe under legacy. ----
+        if block_route:
+            blk = l2p[p] // ppb
+            ch = blk % n_ch
+            dd = (blk // n_ch) % DIES_PER_CHANNEL
+        else:
+            ch = (p * 1103515245 + 12345) % n_ch
+            dd = (p // n_ch) % DIES_PER_CHANNEL
         die = chan_die[ch]
-        dd = (p // n_ch) % DIES_PER_CHANNEL
         dv = die[dd]
         bv = chan_bus[ch]
         if ctx_on:  # inlined Channels.estimate (reads pre-issue state)
@@ -898,6 +919,18 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             bw = bv - t
             wait = dw if dw > bw else bw
             est = (wait if wait > 0.0 else 0.0) + t_read
+        if dv > t:  # GC-pause attribution (Channels.read mirror)
+            gu = gc_until[ch][dd]
+            if gu > t:
+                gf = gc_from[ch][dd]
+                lo = t if t > gf else gf
+                hi = dv if dv < gu else gu
+                pause = hi - lo
+                if pause > 0.0:
+                    ds.gc_stall_events += 1
+                    ds.gc_pause_ns_total += pause
+                    if pause > ds.gc_pause_max_ns:
+                        ds.gc_pause_max_ns = pause
         # inlined Channels.read
         sensed = (dv if dv > t else t) + t_read
         done = (sensed if sensed > bv else bv) + TRANSFER_NS
@@ -907,7 +940,6 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
         ds.flash_reads += 1
         cclk = _insert_miss(ds, st, p, False, t, cclk, csets, cway, n_sets,
                             ways, cres, cdirty, cstamp, epoch_mv, journal,
-                            chan_bus, chan_die, n_ch, t_prog, wr_busy,
                             ftl_write)
         if ctx_on and est > ctx_thr:
             st.ctx_switches += 1
@@ -1151,10 +1183,13 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                     _record(m.stats, "hit_log", lat)
                     i += 1
                 else:
+                    # service location = live physical placement (block
+                    # FTL) or the logical hash stripe (legacy)
+                    chb, ddb = m.loc_of(pgb)
                     ctx_on = cfg.enable_ctx_switch
                     if ctx_on:
-                        est = m.channels.estimate(pgb, t)
-                    done = m.channels.read(pgb, t)
+                        est = m.channels.estimate(chb, ddb, t)
+                    done = m.channels.read(chb, ddb, t)
                     ev = m.cache.insert(pgb, False)
                     m._handle_evict(ev, t)
                     if ctx_on and est > cfg.ctx_threshold_ns:
@@ -1183,7 +1218,8 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                     wslots.remove(oldest)
                     if oldest > t:
                         stall = oldest - t
-                wslots.append(m.channels.read(pgb, t + stall))
+                wslots.append(m.channels.read(*m.loc_of(pgb), t + stall,
+                                              gc_attr=False))
                 ev = m.cache.insert(pgb, True)
                 m._handle_evict(ev, t)
                 m._maybe_promote(pgb, t)

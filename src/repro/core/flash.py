@@ -1,35 +1,55 @@
-"""Block-granular flash backend: FTL mapping, GC victim selection, and
-write-amplification / tail-latency accounting.
+"""Block-granular flash backend: FTL mapping, physical-address service
+routing, GC victim selection, wear leveling, hot/cold write frontiers,
+and write-amplification / tail-latency accounting.
 
 The legacy ``Ftl`` in ``ssd.py`` is a free-page *counter*: GC fires at a
-utilization threshold with a fixed 8-page migration cost and a channel/die
-pick that cannot depend on what the device actually wrote. This module
-replaces it (``SimConfig.ftl_backend = "block"``, the default) with real
-erase-block state, so the write log's coalescing *measurably* reduces
-write amplification and GC-induced tail latency:
+utilization threshold with a fixed 8-page migration cost and a logical
+page-hash channel/die pick that cannot depend on what the device actually
+wrote. This module replaces it (``SimConfig.ftl_backend = "block"``, the
+default) with real erase-block state, so the write log's coalescing
+*measurably* reduces write amplification and GC-induced tail latency:
 
   * **Geometry** — physical space is the logical page space times
     ``1 + op_ratio`` (over-provisioning), carved into erase blocks of
     ``pages_per_block`` pages. Every logical page is preconditioned
-    mapped (sequentially, blocks sealed), exactly like a device whose
-    data set is resident; the spare blocks are the initial free pool.
+    identity-mapped (sequentially, blocks sealed), exactly like a device
+    whose data set is resident; the spare blocks are the initial free
+    pool.
+  * **Physical service routing** — ``phys_loc(page)`` derives the
+    channel/die every read and program queues on from the *block* the
+    FTL placed the page in (``blk_loc``: ``blk % n_channels``,
+    ``(blk // n_channels) % DIES_PER_CHANNEL`` — the same derivation GC
+    busy windows use, so a page migrated into the GC frontier is
+    subsequently served from the die GC programmed it to). The legacy
+    backend keeps the historical logical page-hash striping
+    (``Channels.logical_loc``) bit-for-bit.
   * **Log-structured mapping** — ``l2p``/``p2l`` plus a dense per-page
     valid bitmap and per-block valid counts. A host program invalidates
-    the old physical slot and appends to the *host frontier* block;
-    GC migrations append to a separate *GC frontier* (hot/cold
-    separation, the standard greedy-cleaning layout).
+    the old physical slot and appends to a *host frontier* block; GC
+    migrations append to a separate *GC frontier* (the standard
+    greedy-cleaning layout). With ``SimConfig.hotcold`` the host
+    frontier splits in two by rewrite heat: a program whose previous
+    copy still sits in an OPEN block (rewritten within one
+    frontier-block lifetime) is hot and lands on the hot frontier, so
+    hot pages die together and hot blocks seal near-empty.
   * **GC victim policies** — ``gc_policy="greedy"`` picks the sealed
     block with the fewest valid pages; ``"cost-benefit"`` ranks sealed
     blocks by the classic (1-u)/(1+u) * age score (age in seal-sequence
     ticks), which beats greedy when hot and cold data age at different
     rates. Both are deterministic (NumPy argmin/argmax, first-minimal
     tie-break).
+  * **Wear-aware allocation** — with ``SimConfig.wear_leveling`` a
+    sealed frontier draws its replacement from the free pool by lowest
+    erase count (block-id tie-break) instead of LIFO pop, rotating the
+    spare pool and flattening the per-block erase spread.
   * **Migration-proportional GC cost** — each collection occupies the
     victim block's die for ``erase_ns + live * read_ns`` and writes each
     live page through the GC frontier's channel/die (``program_ns`` +
     bus transfer per page). Fewer live pages — what log coalescing buys —
     means measurably shorter busy windows, which Algorithm 1's estimator
-    observes exactly like any other queued work.
+    observes exactly like any other queued work; the windows are also
+    recorded in ``DeviceState.gc_die_until`` so reads that queue behind
+    them are attributed as GC pauses (``Stats.gc_pause_ns_total``).
   * **Wear / WAF accounting** — per-block erase counts and a migrated-
     page counter; ``Stats.waf`` is (host programs + migrated pages) /
     host programs.
@@ -38,19 +58,16 @@ Exactness contract with the batched engine: every flash program happens
 on a *boundary* path (dirty evictions, compaction drains, Base-CSSD
 write-allocate fills), which both engines execute through the SAME
 ``on_flash_write`` method of the shared policy object at the same
-sequence points — there is nothing engine-specific to transcribe, so
-parity is structural (enforced by tests/test_flash.py and the
-tests/test_engine.py grid).
-
-Addressing note: read/program *bus and die queueing* keeps the logical
-page-interleaved striping of ``Channels`` (the paper's latency model);
-the block mapping here governs GC, wear and WAF, and GC busy windows
-land on the die derived from the victim/frontier *block* id — see
-DESIGN.md §Block-granular flash backend.
+sequence points — ``on_flash_write`` now also charges the program's
+bus/die timing at the destination frontier's physical location, so there
+is nothing engine-specific to transcribe and parity is structural
+(enforced by tests/test_flash.py and the tests/test_engine.py grid).
+Mapping changes only ever happen on these boundary paths, which is what
+keeps the engines' cached classification machinery untouched by routing.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Tuple
 
 import numpy as np
 
@@ -59,6 +76,16 @@ from repro.core.device_state import DIES_PER_CHANNEL
 from repro.core.ssd import TRANSFER_NS
 
 GC_POLICIES = ("greedy", "cost-benefit")
+
+
+def blk_loc(blk: int, n_channels: int) -> Tuple[int, int]:
+    """Physical placement of an erase block: (channel, die). Consecutive
+    blocks stripe across channels, then dies, so every block below
+    ``n_channels * DIES_PER_CHANNEL`` owns a distinct (channel, die) pair
+    — maximal die-level parallelism for block-granular placement. The
+    ONE derivation shared by read/program routing (``BlockFtl.phys_loc``)
+    and GC busy-window placement."""
+    return blk % n_channels, (blk // n_channels) % DIES_PER_CHANNEL
 
 
 class FlashState:
@@ -71,28 +98,40 @@ class FlashState:
         "l2p", "l2p_mv", "p2l", "p2l_mv",
         "pvalid", "pvalid_mv", "blk_valid", "blk_valid_mv",
         "blk_state", "blk_state_mv", "blk_seal", "blk_seal_mv",
-        "blk_erase", "blk_erase_mv",
+        "blk_erase", "blk_erase_mv", "blk_gc", "blk_gc_mv",
         "free", "seal_seq",
         "host_blk", "host_slot", "gc_blk", "gc_slot",
+        "hot_blk", "hot_slot", "heat_win",
     )
 
     def __init__(self, page_space: int, pages_per_block: int,
-                 op_ratio: float):
+                 op_ratio: float, hotcold: bool = False):
         ppb = max(int(pages_per_block), 2)
         lblocks = -(-page_space // ppb)  # ceil
-        # spare >= 4 blocks: two open frontiers + the 2-block GC reserve
-        # must always be coverable even at tiny test geometries
-        n_blocks = max(int(lblocks * (1.0 + op_ratio)) + 1, lblocks + 4)
+        # spare floor: every open frontier (host [+hot] + GC) plus the
+        # 2-block GC reserve must be coverable even at tiny test geometries
+        n_frontiers = 3 if hotcold else 2
+        n_blocks = max(int(lblocks * (1.0 + op_ratio)) + 1,
+                       lblocks + n_frontiers + 2)
         self.ppb = ppb
         self.n_blocks = n_blocks
         self.n_phys = n_blocks * ppb
         self.reserve = max(2, (n_blocks - lblocks) // 8)
         # --- precondition: identity-map every logical page, seal those
-        # blocks (ages 1..lblocks in seal order) ---
+        # blocks (ages 1..lblocks in seal order). Identity keeps each
+        # workload's contiguous page tiers (hot / warm-write / medium /
+        # cold ranges) CLUSTERED in blocks: rewrite-heavy warm ranges
+        # invalidate whole blocks, which is what gives greedy GC its
+        # near-empty victims (the log-size -> WAF coupling). Under
+        # blk_loc any range of more than a few hundred pages still spans
+        # dozens of distinct (channel, die) pairs, so miss parallelism
+        # matches the logical stripe's for every Table I access pattern
+        # (traces have line-level runs, not cross-page sequential scans).
+        idx = np.arange(page_space)
         self.l2p = np.full(page_space, -1, np.int64)
-        self.l2p[:] = np.arange(page_space)
+        self.l2p[:] = idx
         self.p2l = np.full(self.n_phys, -1, np.int64)
-        self.p2l[:page_space] = np.arange(page_space)
+        self.p2l[:page_space] = idx
         self.pvalid = np.zeros(self.n_phys, bool)
         self.pvalid[:page_space] = True
         self.blk_valid = np.zeros(n_blocks, np.int64)
@@ -105,6 +144,12 @@ class FlashState:
         self.blk_seal = np.zeros(n_blocks, np.int64)
         self.blk_seal[:lblocks] = np.arange(1, lblocks + 1)
         self.blk_erase = np.zeros(n_blocks, np.int64)
+        # which open/sealed blocks hold GC-written data: GC migrates the
+        # coldest survivors, so a copy GC wrote must never make the next
+        # rewrite look "hot" (the GC frontier is an open block and would
+        # otherwise pass the heat test). Set when a frontier opens a
+        # block, per frontier kind.
+        self.blk_gc = np.zeros(n_blocks, bool)
         self.seal_seq = lblocks
         # free pool: pop() hands out ascending block ids
         self.free: List[int] = list(range(n_blocks - 1, lblocks - 1, -1))
@@ -115,21 +160,40 @@ class FlashState:
         self.blk_state_mv = memoryview(self.blk_state)
         self.blk_seal_mv = memoryview(self.blk_seal)
         self.blk_erase_mv = memoryview(self.blk_erase)
+        self.blk_gc_mv = memoryview(self.blk_gc)
         self.host_blk = self.free.pop()
         self.host_slot = 0
         self.blk_state_mv[self.host_blk] = 1
         self.gc_blk = self.free.pop()
         self.gc_slot = 0
         self.blk_state_mv[self.gc_blk] = 1
+        self.blk_gc_mv[self.gc_blk] = True
+        if hotcold:
+            self.hot_blk = self.free.pop()
+            self.hot_slot = 0
+            self.blk_state_mv[self.hot_blk] = 1
+        else:
+            self.hot_blk = -1
+            self.hot_slot = 0
+        # rewrite-heat window (hotcold): a program is "hot" when its
+        # previous copy lives in an open block OR one sealed within the
+        # last heat_win seal ticks — i.e. the page's rewrite interval is
+        # shorter than ~a quarter of the data set's block count. Scales
+        # with the device: eviction- and compaction-driven rewrite
+        # intervals grow with the footprint, and a fixed one-block window
+        # would classify everything cold.
+        self.heat_win = max(8, lblocks // 4)
 
 
 class BlockFtl:
     """Block-granular FTL policy over the shared FlashState.
 
     Interface-compatible with the legacy ``ssd.Ftl``: both engines call
-    ``on_flash_write(now, page)`` once per host flash program (the
-    channel/bus timing of the program itself is charged by the caller,
-    exactly as with the legacy counter)."""
+    ``on_flash_write(now, page)`` once per host flash program. Unlike the
+    legacy counter, the block FTL also CHARGES the program's bus/die
+    timing itself — the destination (the frontier block the page lands
+    in, hot or cold) is only known here, and physical routing means the
+    timing must land on that block's die."""
 
     def __init__(self, cfg: SimConfig, state, channels):
         if cfg.gc_policy not in GC_POLICIES:
@@ -139,23 +203,56 @@ class BlockFtl:
         self.fs = state.flash
         self.channels = channels
         self.greedy = cfg.gc_policy == "greedy"
+        self.wear_level = bool(cfg.wear_leveling)
         self.read_ns = cfg.flash.read_ns
         self.program_ns = cfg.flash.program_ns
         self.erase_ns = cfg.flash.erase_ns
         self.n_channels = cfg.n_channels
 
+    # ---- physical service-path resolution ----
+    def phys_loc(self, page: int) -> Tuple[int, int]:
+        """(channel, die) of the page's current physical location —
+        block-id-derived (``blk_loc``), consistent with where GC busy
+        windows and frontier programs land. This is what every read and
+        program queues on under ``ftl_backend="block"``; the legacy
+        backend's logical hash lives in ``Channels.logical_loc``."""
+        return blk_loc(self.fs.l2p_mv[page] // self.fs.ppb, self.n_channels)
+
     # ---- host program path (dirty evictions, compaction flush, Base
     # write-allocate fills) ----
     def on_flash_write(self, now: float, page: int) -> None:
         fs = self.fs
+        s = self.s
         ppb = fs.ppb
         old = fs.l2p_mv[page]
+        # rewrite heat must be read BEFORE the old copy is invalidated:
+        # hot == the previous physical copy still sits in an open block
+        # or one sealed within the heat window (the page's rewrite
+        # interval is short relative to the data set) — unless that copy
+        # was written by GC (blk_gc): a migrated page is a cold survivor
+        # and GC's frontier recency says nothing about ITS rewrite rate
+        ob = old // ppb
+        hot = fs.hot_blk >= 0 and old >= 0 and not fs.blk_gc_mv[ob] and (
+            fs.blk_state_mv[ob] == 1
+            or fs.seal_seq - fs.blk_seal_mv[ob] <= fs.heat_win)
+        b = fs.hot_blk if hot else fs.host_blk
+        slot = fs.hot_slot if hot else fs.host_slot
+        # charge the program at the destination block's channel/die
+        # (same bus->die recipe as Channels.write)
+        ch, d = blk_loc(b, self.n_channels)
+        bus = s.chan_bus[ch]
+        xfer_start = now if now > bus else bus
+        xfer_end = xfer_start + TRANSFER_NS
+        s.chan_bus[ch] = xfer_end
+        die = s.chan_die[ch]
+        dv = die[d]
+        die[d] = (xfer_end if xfer_end > dv else dv) + self.program_ns
+        s.chan_busy_ns += TRANSFER_NS + self.program_ns / DIES_PER_CHANNEL
+        s.flash_writes += 1
         if old >= 0:  # invalidate the stale physical copy
             fs.pvalid_mv[old] = False
-            fs.blk_valid_mv[old // ppb] -= 1
+            fs.blk_valid_mv[ob] -= 1
             fs.p2l_mv[old] = -1
-        b = fs.host_blk
-        slot = fs.host_slot
         pp = b * ppb + slot
         # Install the mapping BEFORE any seal/GC: if this program fills
         # the frontier and every earlier slot was already invalidated
@@ -176,8 +273,15 @@ class BlockFtl:
                 self._collect(now)
             nb = self._pop_free()
             fs.blk_state_mv[nb] = 1
-            fs.host_blk = nb
-            fs.host_slot = 0
+            fs.blk_gc_mv[nb] = False  # host-written data
+            if hot:
+                fs.hot_blk = nb
+                fs.hot_slot = 0
+            else:
+                fs.host_blk = nb
+                fs.host_slot = 0
+        elif hot:
+            fs.hot_slot = slot
         else:
             fs.host_slot = slot
 
@@ -186,15 +290,34 @@ class BlockFtl:
         at degenerate geometries (spare pool ~ the open frontiers, every
         sealed block fully valid) GC cannot free net space and the pool
         can starve — surface the configuration problem instead of an
-        IndexError deep in the replay loop."""
+        IndexError deep in the replay loop. With ``wear_leveling`` the
+        pick is the lowest-erase-count free block (block-id tie-break, so
+        the choice is independent of the pool's internal order) instead
+        of the LIFO pop that recycles recently-erased blocks."""
         fs = self.fs
-        if not fs.free:
+        free = fs.free
+        if not free:
             raise RuntimeError(
                 "block FTL spare pool exhausted: GC cannot reclaim net "
                 f"space ({fs.n_blocks} blocks x {fs.ppb} pages, reserve "
                 f"{fs.reserve}) — raise SimConfig.op_ratio or "
                 "pages_per_block for this write pattern")
-        return fs.free.pop()
+        if not self.wear_level:
+            return free.pop()
+        er = fs.blk_erase_mv
+        best_i = 0
+        best_b = free[0]
+        best_e = er[best_b]
+        for i in range(1, len(free)):
+            b = free[i]
+            e = er[b]
+            if e < best_e or (e == best_e and b < best_b):
+                best_i = i
+                best_b = b
+                best_e = e
+        free[best_i] = free[-1]  # O(1) swap-remove; order-independent pick
+        free.pop()
+        return best_b
 
     # ---- garbage collection ----
     def _collect(self, now: float) -> None:
@@ -236,11 +359,17 @@ class BlockFtl:
         # victim die: erase + one read per live page; bus: the read-out
         # transfers. Proportional to migration work, so coalesced logs
         # (fewer live pages per victim) see measurably shorter windows.
-        ch = b % self.n_channels
-        d = (b // self.n_channels) % DIES_PER_CHANNEL
+        # The carved window is recorded ([gc_die_from, gc_die_until],
+        # contiguous windows merged): reads whose wait overlaps it are
+        # attributed as GC pauses.
+        ch, d = blk_loc(b, self.n_channels)
         die = s.chan_die[ch]
-        die[d] = (now if now > die[d] else die[d]) \
-            + self.erase_ns + n_live * self.read_ns
+        dv = die[d]
+        start = now if now > dv else dv
+        die[d] = start + self.erase_ns + n_live * self.read_ns
+        if start > s.gc_die_until[ch][d]:
+            s.gc_die_from[ch][d] = start
+        s.gc_die_until[ch][d] = die[d]
         bus = s.chan_bus[ch]
         s.chan_bus[ch] = (now if now > bus else bus) \
             + n_live * TRANSFER_NS
@@ -284,16 +413,22 @@ class BlockFtl:
             fs.blk_seal_mv[b] = fs.seal_seq
             nb = self._pop_free()
             fs.blk_state_mv[nb] = 1
+            fs.blk_gc_mv[nb] = True  # GC-written data: never "hot"
             fs.gc_blk = nb
             fs.gc_slot = 0
         else:
             fs.gc_slot = slot
-        ch = b % self.n_channels
-        d = (b // self.n_channels) % DIES_PER_CHANNEL
+        ch, d = blk_loc(b, self.n_channels)
         bus = s.chan_bus[ch]
         s.chan_bus[ch] = (now if now > bus else bus) + TRANSFER_NS
         die = s.chan_die[ch]
-        die[d] = (now if now > die[d] else die[d]) + self.program_ns
+        dv = die[d]
+        start = now if now > dv else dv
+        die[d] = start + self.program_ns
+        # migration programs are GC work: extend/merge the carved window
+        if start > s.gc_die_until[ch][d]:
+            s.gc_die_from[ch][d] = start
+        s.gc_die_until[ch][d] = die[d]
         s.chan_busy_ns += TRANSFER_NS + self.program_ns / DIES_PER_CHANNEL
         return pp
 
@@ -316,3 +451,8 @@ def check_invariants(fs: FlashState) -> None:
         if st == 0:
             assert int(fs.blk_valid[b]) == 0, "free block holds valid pages"
     assert fs.blk_state[fs.host_blk] == 1 and fs.blk_state[fs.gc_blk] == 1
+    assert fs.blk_gc[fs.gc_blk] and not fs.blk_gc[fs.host_blk]
+    if fs.hot_blk >= 0:
+        assert fs.blk_state[fs.hot_blk] == 1, "hot frontier must stay open"
+        assert len({fs.host_blk, fs.gc_blk, fs.hot_blk}) == 3, \
+            "frontiers must be distinct blocks"

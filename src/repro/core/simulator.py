@@ -98,6 +98,7 @@ class Stats:
         "n", "host_r", "host_w", "hit_log", "hit_cache", "miss_flash", "ssd_w",
         "lat_sum", "lat_host", "lat_hit", "lat_miss", "ctx_switches",
         "flash_write_pages", "gc_events", "gc_migrated_pages", "waf",
+        "gc_pause_ns_total", "gc_pause_max_ns", "gc_stall_events",
         "promotions", "demotions",
         "exec_ns", "busy_ns", "replays",
         "lat_p50_ns", "lat_p95_ns", "lat_p99_ns",
@@ -123,6 +124,12 @@ class Stats:
         migrated pages, and the exact latency percentiles. Pure function
         of counters both engines produce identically."""
         self.gc_migrated_pages = ds.gc_migrated_pages
+        # host-observed GC pauses: accumulated at every flash-read issue
+        # that queued behind a GC-carved die window (Channels.read + the
+        # inline span's mirrored sites — identical order in both engines)
+        self.gc_pause_ns_total = ds.gc_pause_ns_total
+        self.gc_pause_max_ns = ds.gc_pause_max_ns
+        self.gc_stall_events = ds.gc_stall_events
         fw = ds.flash_writes
         self.waf = (fw + ds.gc_migrated_pages) / fw if fw else 1.0
         lat_log = cfg.cxl_protocol_ns + cfg.log_index_ns + cfg.ssd_dram_ns
@@ -191,11 +198,18 @@ class Machine:
         self.state = DeviceState(cfg, page_space)
         self.channels = Channels(cfg, self.state)
         # block-granular FTL (core/flash.py) unless the legacy free-page
-        # counter is requested; both expose on_flash_write(now, page)
+        # counter is requested; both expose on_flash_write(now, page),
+        # which performs the ENTIRE host program (destination resolution,
+        # bus/die timing, mapping update, GC). ``loc_of`` is the service-
+        # path address resolver every read consults: the FTL's physical
+        # placement under the block backend, the logical hash stripe
+        # under legacy.
         if self.state.flash is not None:
             self.ftl = BlockFtl(cfg, self.state, self.channels)
+            self.loc_of = self.ftl.phys_loc
         else:
             self.ftl = Ftl(cfg, self.state, self.channels)
+            self.loc_of = self.channels.logical_loc
         self.cache = DataCache(cfg, self.state)
         self.log = WriteLog(cfg, self.state) if cfg.enable_write_log else None
         self.host = self.state.host
@@ -243,8 +257,7 @@ class Machine:
 
     def _handle_evict(self, ev, now: float) -> None:
         if ev is not None and ev[1]:  # dirty page writeback
-            self.channels.write(ev[0], now)
-            self.ftl.on_flash_write(now, ev[0])
+            self.ftl.on_flash_write(now, ev[0])  # timing + mapping + GC
             self.stats.flash_write_pages += 1
 
     # ---- compaction (§III-B) ----
@@ -259,8 +272,10 @@ class Machine:
         old = log.swap_for_compaction()
         for page, lines in old.items():
             if self.cache.lookup(page, touch=False) is None:
-                self.channels.read(page, now)  # coalescing-buffer fill
-            self.channels.write(page, now)
+                # coalescing-buffer fill from the page's current location
+                # (device-internal: no thread blocks on it -> no GC-pause
+                # attribution)
+                self.channels.read(*self.loc_of(page), now, gc_attr=False)
             self.ftl.on_flash_write(now, page)
             self.stats.flash_write_pages += 1
             st.log_flushed_pages += 1
@@ -313,7 +328,10 @@ class Machine:
                 oldest = min(wslots)
                 wslots.remove(oldest)
                 stall = max(0.0, oldest - now)
-            done = self.channels.read(page, now + stall)
+            # background fetch (posted store): occupies a write slot, the
+            # core never waits on the read itself -> no GC-pause books
+            done = self.channels.read(*self.loc_of(page), now + stall,
+                                      gc_attr=False)
             wslots.append(done)
             ev = self.cache.insert(page, True)
             self._handle_evict(ev, now)
@@ -331,17 +349,20 @@ class Machine:
         if self.cache.lookup(page) is not None:
             self._maybe_promote(page, now)
             return base + cfg.cache_index_ns + cfg.ssd_dram_ns, None, "hit_cache"
-        # SSD DRAM miss -> flash
+        # SSD DRAM miss -> flash: service latency queues on the page's
+        # PHYSICAL placement (the die the FTL put it on; legacy = the
+        # logical hash stripe)
+        ch, d = self.loc_of(page)
         if cfg.enable_ctx_switch:
-            est = self.channels.estimate(page, now)
+            est = self.channels.estimate(ch, d, now)
             if est > cfg.ctx_threshold_ns:
-                done = self.channels.read(page, now)
+                done = self.channels.read(ch, d, now)
                 ev = self.cache.insert(page, False)
                 self._handle_evict(ev, now)
                 st.ctx_switches += 1
                 self._maybe_promote(page, now)
                 return 0.0, done, "switched"
-        done = self.channels.read(page, now)
+        done = self.channels.read(ch, d, now)
         ev = self.cache.insert(page, False)
         self._handle_evict(ev, now)
         self._maybe_promote(page, now)

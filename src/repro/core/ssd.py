@@ -49,6 +49,12 @@ class Channels:
     transfer — programs overlap massively across dies (this is what makes
     write-back SSDs viable at all). Algorithm 1's estimator reads this
     queue state exactly as the paper's FTL does.
+
+    Since the physical-routing refactor every timing method takes an
+    already-resolved ``(ch, d)`` location: under the block FTL that is
+    ``BlockFtl.phys_loc(page)`` (the die the FTL actually placed the page
+    on); under the legacy backend it is ``logical_loc(page)`` — the ONE
+    remaining copy of the historical page-hash stripe.
     """
 
     def __init__(self, cfg: SimConfig, state: DeviceState):
@@ -58,27 +64,47 @@ class Channels:
         self.read_ns = cfg.flash.read_ns
         self.program_ns = cfg.flash.program_ns
 
-    def channel_of(self, page: int) -> int:
-        return (page * 1103515245 + 12345) % self.n_channels
+    def logical_loc(self, page: int) -> Tuple[int, int]:
+        """Legacy page-interleaved striping: (channel, die) from the
+        LOGICAL page id. The PR 4-era hash, kept bit-exact as the
+        ``ftl_backend="legacy"`` service path and regression anchor."""
+        return ((page * 1103515245 + 12345) % self.n_channels,
+                (page // self.n_channels) % DIES_PER_CHANNEL)
 
-    def die_of(self, page: int) -> int:
-        return (page // self.n_channels) % DIES_PER_CHANNEL
-
-    def estimate(self, page: int, now: float) -> float:
-        """Algorithm 1: queued delay + read latency for this page's die/bus."""
-        ch = (page * 1103515245 + 12345) % self.n_channels
-        d = (page // self.n_channels) % DIES_PER_CHANNEL
+    def estimate(self, ch: int, d: int, now: float) -> float:
+        """Algorithm 1: queued delay + read latency for this die/bus."""
         s = self.s
         wait = max(s.chan_die[ch][d] - now, s.chan_bus[ch] - now, 0.0)
         return wait + self.read_ns
 
-    def read(self, page: int, now: float) -> float:
-        """Issue a flash page read; returns data-available time."""
-        ch = (page * 1103515245 + 12345) % self.n_channels
-        d = (page // self.n_channels) % DIES_PER_CHANNEL
+    def read(self, ch: int, d: int, now: float,
+             gc_attr: bool = True) -> float:
+        """Issue a flash page read; returns data-available time. The part
+        of the read's die wait that overlaps the last GC-carved window
+        ([gc_die_from, gc_die_until]) is attributed as a host-observed GC
+        pause — the accounting the fig14 exec-time story reads (mirrored
+        verbatim by the batched engine's inline-span read sites). Clipping
+        at the window START keeps wait the read would have suffered behind
+        ordinary host programs out of the GC books. ``gc_attr=False``
+        marks a device-internal read no thread blocks on (compaction
+        coalescing-buffer fills, Base-CSSD write-allocate background
+        fetches): it still occupies the die/bus but books no pause."""
         s = self.s
         die = s.chan_die[ch]
-        start = max(now, die[d])
+        dv = die[d]
+        if gc_attr and dv > now:
+            gu = s.gc_die_until[ch][d]
+            if gu > now:
+                gf = s.gc_die_from[ch][d]
+                lo = now if now > gf else gf
+                hi = dv if dv < gu else gu
+                pause = hi - lo
+                if pause > 0.0:
+                    s.gc_stall_events += 1
+                    s.gc_pause_ns_total += pause
+                    if pause > s.gc_pause_max_ns:
+                        s.gc_pause_max_ns = pause
+        start = now if now > dv else dv
         sensed = start + self.read_ns
         xfer_start = max(sensed, s.chan_bus[ch])
         done = xfer_start + TRANSFER_NS
@@ -88,10 +114,8 @@ class Channels:
         s.flash_reads += 1
         return done
 
-    def write(self, page: int, now: float) -> float:
+    def write(self, ch: int, d: int, now: float) -> float:
         """Issue a flash program; bus for the transfer, die for tProg."""
-        ch = (page * 1103515245 + 12345) % self.n_channels
-        d = (page // self.n_channels) % DIES_PER_CHANNEL
         s = self.s
         die = s.chan_die[ch]
         xfer_start = max(now, s.chan_bus[ch])
@@ -114,7 +138,12 @@ class Channels:
         ch = s.gc_events % cfg.n_channels
         d = (s.gc_events // cfg.n_channels) % DIES_PER_CHANNEL
         cost = cfg.flash.erase_ns + 8 * (cfg.flash.read_ns + cfg.flash.program_ns)
-        s.chan_die[ch][d] = max(now, s.chan_die[ch][d]) + cost
+        start = max(now, s.chan_die[ch][d])
+        s.chan_die[ch][d] = start + cost
+        # GC-pause window: merge with the previous one when contiguous
+        if start > s.gc_die_until[ch][d]:
+            s.gc_die_from[ch][d] = start
+        s.gc_die_until[ch][d] = s.chan_die[ch][d]
         s.chan_bus[ch] = max(now, s.chan_bus[ch]) + 8 * TRANSFER_NS
         s.chan_busy_ns += cost / DIES_PER_CHANNEL
         s.gc_events += 1
@@ -124,18 +153,30 @@ class Channels:
 class Ftl:
     """Legacy free-page accounting driving the GC model
     (``SimConfig.ftl_backend = "legacy"``; the default block-granular
-    backend lives in ``core/flash.py`` and shares this interface)."""
+    backend lives in ``core/flash.py`` and shares this interface).
+
+    Like the block FTL, ``on_flash_write`` performs the whole program:
+    it charges the bus/die timing (at the LOGICAL hash stripe — the PR 4
+    behaviour, bit-for-bit: write first, then the free-page counter and
+    its threshold GC, the exact operation order the old caller-side
+    ``channels.write`` + ``on_flash_write`` pair produced) and then the
+    accounting."""
 
     def __init__(self, cfg: SimConfig, state: DeviceState, channels: Channels):
         self.cfg = cfg
         self.s = state
         self.channels = channels
 
-    def on_flash_write(self, now: float, page: int = -1) -> None:
+    def on_flash_write(self, now: float, page: int) -> None:
+        # page is required (matches BlockFtl): it determines the charged
+        # (channel, die) — a defaulted -1 would silently stripe to a
+        # fixed bogus location
+        ch = self.channels
+        ch.write(*ch.logical_loc(page), now)
         s = self.s
         s.ftl_used += 1  # out-of-place update consumes a free page
         if s.ftl_used >= s.ftl_total:
-            self.channels.gc(now)
+            ch.gc(now)
             s.ftl_used -= max(
                 int(s.ftl_total * (1.0 - self.cfg.gc_threshold)), 1)
 

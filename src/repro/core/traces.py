@@ -210,12 +210,61 @@ def gen_thread_trace(
 #     artifacts/). Storing compressed (zlib packs the skewed page/line
 #     columns ~3-4x) is what allows the cap to sit at 8M events — the
 #     full-length 1.5M-request fig14/17/18 grids now hit the disk layer.
+#     The directory's TOTAL size is bounded too (REPRO_TRACE_CACHE_GB,
+#     default 2 GB): past the cap the least-recently-used npz files are
+#     evicted after each store, so grid sweeps can't grow it unboundedly.
 # Callers treat the returned arrays as read-only (the simulator copies
 # the one column it re-types, gap_ns -> float64).
 # ---------------------------------------------------------------------------
 
 _TRACE_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "traces"
 _DISK_CACHE_MAX_EVENTS = 8_000_000
+# Total on-disk budget for artifacts/traces/ (GB). Grid sweeps across many
+# (workload, threads, n_req, scale) combinations used to grow the
+# directory without bound; beyond the cap the least-recently-USED npz
+# artifacts are evicted (cache hits refresh mtime, so hot streams survive
+# sweeps that churn one-off cells). REPRO_TRACE_CACHE_GB overrides;
+# <= 0 disables the bound.
+_DISK_CACHE_DEFAULT_GB = 2.0
+
+
+def _disk_cache_cap_bytes() -> int:
+    raw = os.environ.get("REPRO_TRACE_CACHE_GB", "")
+    try:
+        gb = float(raw) if raw else _DISK_CACHE_DEFAULT_GB
+    except ValueError:
+        gb = _DISK_CACHE_DEFAULT_GB
+    return int(gb * (1 << 30))
+
+
+def _evict_lru(keep: Path) -> None:
+    """Shrink the trace cache below the size cap, oldest-mtime first
+    (mtime is refreshed on every cache hit, so eviction order is LRU).
+    Best-effort: races with parallel grid workers just skip entries."""
+    cap = _disk_cache_cap_bytes()
+    if cap <= 0:
+        return
+    entries = []
+    total = 0
+    for p in _TRACE_DIR.glob("*.npz"):
+        try:
+            st = p.stat()
+        except OSError:  # concurrently evicted by another worker
+            continue
+        entries.append((st.st_mtime, st.st_size, p))
+        total += st.st_size
+    if total <= cap:
+        return
+    for _, size, p in sorted(entries):
+        if p == keep:  # never evict the artifact just written
+            continue
+        try:
+            p.unlink()
+        except OSError:
+            continue
+        total -= size
+        if total <= cap:
+            return
 
 
 @functools.lru_cache(maxsize=1)
@@ -275,7 +324,12 @@ def gen_traces(
         f"{_source_fingerprint()}.npz")
     if use_disk and path.exists():
         try:
-            return _load_traces(path, n_threads)
+            loaded = _load_traces(path, n_threads)
+            try:  # LRU touch: a hit must not be the next eviction victim
+                os.utime(path)
+            except OSError:
+                pass
+            return loaded
         except Exception:  # corrupt/partial artifact: regenerate
             pass
     traces = [
@@ -284,6 +338,7 @@ def gen_traces(
     if use_disk:
         try:
             _store_traces(path, traces)
+            _evict_lru(keep=path)
         except OSError:  # read-only checkout etc: caching is best-effort
             pass
     return traces
