@@ -102,6 +102,15 @@ def calibrate_engines(total_req: int = 200_000) -> dict:
             cell["cache"] = dict(_engine.CACHE_STATS)
             cell["cache_hit_rate"] = round(_engine.cache_hit_rate(), 4)
             cell["cache_repair_rate"] = round(_engine.cache_repair_rate(), 4)
+            # span-floor trajectory: how much of the cell ran through the
+            # fused kernel vs the scalar span fallback (batched engine;
+            # FUSED_STATS is reset at the start of each batched simulate)
+            fstats = dict(_engine.FUSED_STATS)
+            cell["span_events"] = fstats["span_events"]
+            cell["fused_events"] = fstats["fused_events"]
+            cell["vector_events"] = fstats["vector_events"]
+            cell["fused_frac"] = round(_engine.fused_fraction(r["n"]), 4)
+            cell["events_per_sec"] = cell["batched"]
             out[f"{workload}/{variant}"] = cell
     finally:
         if forced is not None:

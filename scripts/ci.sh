@@ -11,6 +11,7 @@
 #   bash scripts/ci.sh ref        # simulator tests on the reference engine
 #   bash scripts/ci.sh gc         # block-FTL GC/tail figure in quick mode
 #   bash scripts/ci.sh addr       # physical-routing parity (engines x FTLs)
+#   bash scripts/ci.sh fused      # fused-boundary-engine conflict parity
 #   bash scripts/ci.sh bench      # orchestrator smoke + baseline diff
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -67,6 +68,19 @@ if [[ "$STAGE" == "all" || "$STAGE" == "addr" ]]; then
   # routing tests drive BOTH engines explicitly per test; the legacy
   # tests pin the ftl_backend="legacy" anchor.
   python -m pytest -x -q tests/test_flash.py -k "routing or legacy"
+fi
+
+if [[ "$STAGE" == "all" || "$STAGE" == "fused" ]]; then
+  echo "== fused boundary engine: conflict-fallback + window parity =="
+  # The fused scheduler's windows must stay bit-exact under same-set /
+  # same-l2p collision pressure, with prediction on and off. Bench gate
+  # note: the paired-speedup acceptance for the fused engine is measured
+  # with scripts/paired_bench.py --cells bfs-dense against the previous
+  # PR's HEAD (interleaved best-of-3 CPU); the bench stage below only
+  # gates against BENCH_baseline.json, which was re-based cold after the
+  # fused engine landed.
+  python -m pytest -x -q tests/test_engine_fused.py tests/test_simulator.py \
+    -k "fused or window or trace_cache"
 fi
 
 if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then

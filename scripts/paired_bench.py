@@ -53,11 +53,22 @@ def main(argv=None) -> int:
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--json", default="")
+    ap.add_argument("--cells", default="",
+                    help="comma-separated substring filter on 'workload/variant' "
+                         "(e.g. --cells bfs-dense runs just the ctx-bound cells)")
     args = ap.parse_args(argv)
     here = Path(__file__).resolve().parent.parent
     base = Path(args.baseline_root)
+    cells = CELLS
+    if args.cells:
+        pats = [p.strip() for p in args.cells.split(",") if p.strip()]
+        cells = tuple(c for c in CELLS
+                      if any(pat in f"{c[0]}/{c[1]}" for pat in pats))
+        if not cells:
+            ap.error(f"--cells {args.cells!r} matches no cell; "
+                     f"known: {', '.join(f'{w}/{v}' for w, v in CELLS)}")
     results = {}
-    for wl, variant in CELLS:
+    for wl, variant in cells:
         a_best = b_best = float("inf")
         for _ in range(args.reps):  # interleaved: same steal window for both
             b_best = min(b_best, run_cell(base, wl, variant, args.n))

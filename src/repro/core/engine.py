@@ -85,11 +85,16 @@ per-event order keeps even the RNG stream exact.
 """
 from __future__ import annotations
 
+import bisect
+import heapq
+import os
+
 import numpy as np
 
 from repro.configs.base import SimConfig
 from repro.core.device_state import DIES_PER_CHANNEL
-from repro.core.simulator import Machine, Thread, _lat_bin, _record
+from repro.core.simulator import (Machine, Thread, _advance_idle_cores,
+                                  _lat_bin, _record, _run_scheduler)
 from repro.core.ssd import TRANSFER_NS
 
 # Vectorization break-even WITHOUT the classification cache: below this
@@ -135,6 +140,32 @@ def cache_repair_rate() -> float:
     return CACHE_STATS["repairs"] / v if v else 0.0
 
 
+# Fused-engine observability (per process; reset by simulate() alongside
+# CACHE_STATS). Tracks which machinery retired each trace event so the
+# span-floor trajectory is visible across PRs (BENCH_sim.json calibration
+# cells record span_events and fused_frac per cell).
+FUSED_STATS = {
+    "fused_events": 0,    # retired by the fused cross-thread kernel
+    "span_events": 0,     # retired by the scalar fallback span
+    "vector_events": 0,   # bulk-retired by the vectorized chunk path
+    "stage_rounds": 0,    # cross-thread window staging passes
+    "staged_threads": 0,  # thread windows classified across all rounds
+}
+
+
+def reset_fused_stats() -> None:
+    for k in FUSED_STATS:
+        FUSED_STATS[k] = 0
+
+
+def fused_fraction(total_events: int) -> float:
+    """Fraction of events retired by the fused kernel or the vector path
+    (i.e. NOT by the scalar fallback span)."""
+    if total_events <= 0:
+        return 0.0
+    return 1.0 - FUSED_STATS["span_events"] / total_events
+
+
 def supported(cfg: SimConfig) -> bool:
     """Whether the batched engine reproduces this config exactly.
 
@@ -155,15 +186,24 @@ class _ClsCache:
     ``stamp``. A chunk whose pages' epochs are all <= stamp consumes the
     codes as-is; anything else re-classifies the range from the current
     position (one vector pass — cheaper than surgically patching pages,
-    whose stale sets only grow)."""
+    whose stale sets only grow).
 
-    __slots__ = ("codes", "lo", "hi", "stamp")
+    In the fused scheduler the cache doubles as the *window staging* slot:
+    ``sevens`` holds the staged positions of predicted boundaries (code 7)
+    inside [lo, hi) and ``sp`` the consumption cursor. Predictions are
+    ADVISORY — they only size the fused kernel's slice windows; the kernel
+    live-probes every event, so stale predictions cost a re-entry, never
+    correctness."""
+
+    __slots__ = ("codes", "lo", "hi", "stamp", "sevens", "sp")
 
     def __init__(self, n: int):
         self.codes = np.empty(n, np.int8)
         self.lo = 0
         self.hi = 0
         self.stamp = -1
+        self.sevens = ()
+        self.sp = 0
 
 
 class BatchedMachine(Machine):
@@ -183,6 +223,20 @@ class BatchedMachine(Machine):
         self._min_run = cfg.cls_cache_min_run if self._use_cache else _VEC_MIN
         self._window = max(int(cfg.cls_cache_window), 1)
         self._caches: dict = {}  # tid -> _ClsCache
+        # Fused-scheduler hooks: run_fused() attaches the thread list so
+        # window staging can classify ALL pending threads in one flat
+        # vector pass. Staged boundary prediction (code-7 positions sizing
+        # the kernel's slice windows) is only meaningful when quanta end
+        # early (ctx on) and the no-log classifier can stage ahead — and
+        # even then it is OFF by default: on this container classifying a
+        # full window costs more than the tighter slices save (the kernel
+        # live-probes each event in ~93ns either way; see DESIGN.md).
+        # REPRO_FUSED_PREDICT=1 turns it on — it stays bit-exact (window
+        # sizing is advisory), so the parity suites cover both settings.
+        self._threads = None
+        self._predict = (self._use_cache and cfg.enable_ctx_switch
+                         and not cfg.enable_write_log
+                         and os.environ.get("REPRO_FUSED_PREDICT") == "1")
         self.chunk = 512  # adaptive: grows on clean chunks, shrinks at boundaries
         # EWMA of fast-run length (events between state-changing boundaries);
         # decides vector chunks vs the inline span loop. Start optimistic so
@@ -246,7 +300,8 @@ def _last_occurrence_order(pages: np.ndarray):
     return reversed(d)
 
 
-def _classify_positions(m: BatchedMachine, cfg: SimConfig, pg, ln, wr):
+def _classify_positions(m: BatchedMachine, cfg: SimConfig, pg, ln, wr,
+                        pair_base=None):
     """Extended class codes for a batch of trace events against the current
     state snapshot.
 
@@ -254,7 +309,10 @@ def _classify_positions(m: BatchedMachine, cfg: SimConfig, pg, ln, wr):
     as long as same-page events appear in ascending trace order: the
     newness / store-to-load-forwarding logic groups by (page, line) pair,
     and pairs never span pages, so per-page ascending order is the only
-    ordering it observes."""
+    ordering it observes. When the batch concatenates windows of SEVERAL
+    threads (fused staging), ``pair_base`` carries a per-event segment
+    offset that keeps the (page, line) grouping — and therefore the
+    store-to-load forwarding — from leaking across thread boundaries."""
     if cfg.dram_only:
         return wr.astype(np.int8)
     ds = m.state
@@ -274,7 +332,10 @@ def _classify_positions(m: BatchedMachine, cfg: SimConfig, pg, ln, wr):
     wmask = wr & ~hostm
     widx = np.flatnonzero(wmask)
     if widx.size:
-        pairs = pg * 64 + ln
+        if pair_base is None:
+            pairs = pg * 64 + ln
+        else:
+            pairs = (pg + pair_base) * 64 + ln
         wp = pairs[widx]
         order = np.argsort(wp, kind="stable")
         sw = wp[order]
@@ -309,6 +370,9 @@ def _refresh_cache(m: BatchedMachine, cfg: SimConfig, th: Thread,
     cc.lo = i
     cc.hi = r
     cc.stamp = m.state.epoch_clock
+    if m._predict:  # refresh the advisory boundary predictions too
+        cc.sevens = (np.flatnonzero(cc.codes[i:r] == 7) + i).tolist()
+        cc.sp = 0
     CACHE_STATS["classified"] += r - i
 
 
@@ -413,6 +477,7 @@ def _apply_prefix(m: BatchedMachine, cfg: SimConfig, th: Thread,
         buf[3, 2::2] = lats
     t, st.lat_sum, st.lat_host, st.lat_hit = buf.cumsum(axis=1)[:, -1].tolist()
     # counters
+    FUSED_STATS["vector_events"] += b
     st.n += b
     st.host_r += n_hr
     st.host_w += n_hw
@@ -792,6 +857,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
         ds.cache_clock = cclk
         if k:
             m.runlen += 0.25 * (k / (slow_n + bnd_n + 1) - m.runlen)
+        FUSED_STATS["span_events"] += k
         st.n += k
         st.host_r += host_r
         st.host_w += host_w
@@ -989,6 +1055,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
         ds.log_active_n = an
     if k:
         m.runlen += 0.25 * (k / (slow_n + bnd_n + 1) - m.runlen)
+    FUSED_STATS["span_events"] += k
     st.n += k
     st.host_r += host_r
     st.host_w += host_w
@@ -1273,3 +1340,805 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             m.chunk = min(_CHUNK_MAX, m.chunk * 2)
     th.i = i
     return t
+
+
+def _stage_windows(m: BatchedMachine, cfg: SimConfig, th: Thread,
+                   i: int) -> _ClsCache:
+    """Cross-thread window staging for the fused kernel.
+
+    Classifies the upcoming trace window of the requesting thread AND of
+    every other pending thread whose staged range is exhausted in ONE flat
+    vector pass over concatenated event arrays, then scatters the codes
+    back into the per-thread classification caches (stamped at the current
+    epoch, so the vector path can validate and consume them unchanged).
+    This amortizes the classifier's fixed NumPy dispatch cost across the
+    whole runnable set — at ctx-bound quantum sizes (~50 events) per-thread
+    staging would pay that cost ~24x per scheduling round. Store-to-load
+    forwarding cannot leak between threads: concatenated segments get
+    composite (page, line) keys via _classify_positions' ``pair_base``.
+
+    The staged code-7 positions (``sevens``) feed the kernel's window
+    sizing only; every event is still live-probed against the shared
+    state, so cross-thread staleness (another thread evicting or
+    inserting a page between staging and consumption) costs at most a
+    mis-sized window, never a wrong result."""
+    caches = m._caches
+    want = max(min(4 * m.chunk, m._window), 512)
+    reqs = []
+
+    def _need(th2, lo):
+        cc2 = caches.get(th2.tid)
+        if cc2 is None:
+            cc2 = _ClsCache(th2.n)
+            caches[th2.tid] = cc2
+        reqs.append((th2, cc2, lo, min(th2.n, lo + want)))
+        return cc2
+
+    cc = _need(th, i)
+    threads = m._threads
+    if threads is not None:
+        for th2 in threads:
+            if th2 is th or th2.done or th2.i >= th2.n:
+                continue
+            cc2 = caches.get(th2.tid)
+            if cc2 is not None and cc2.lo <= th2.i < cc2.hi:
+                continue  # still holds a live staged range
+            _need(th2, th2.i)
+    if len(reqs) == 1:
+        _refresh_cache(m, cfg, th, cc, i, want)
+        return cc
+    pg = np.concatenate([t2.page[lo:hi] for t2, _, lo, hi in reqs])
+    ln = np.concatenate([t2.line[lo:hi] for t2, _, lo, hi in reqs])
+    wr = np.concatenate([t2.write[lo:hi] for t2, _, lo, hi in reqs])
+    if m.log is None:
+        codes = _classify_positions(m, cfg, pg, ln, wr)
+    else:
+        sizes = [hi - lo for _, _, lo, hi in reqs]
+        pb = np.repeat(
+            np.arange(len(reqs), dtype=np.int64) * m.page_space, sizes)
+        codes = _classify_positions(m, cfg, pg, ln, wr, pair_base=pb)
+    ec = m.state.epoch_clock
+    predict = m._predict
+    FUSED_STATS["stage_rounds"] += 1
+    off = 0
+    for th2, cc2, lo, hi in reqs:
+        w2 = hi - lo
+        seg = codes[off:off + w2]
+        cc2.codes[lo:hi] = seg
+        off += w2
+        cc2.lo = lo
+        cc2.hi = hi
+        cc2.stamp = ec
+        if predict:
+            cc2.sevens = (np.flatnonzero(seg == 7) + lo).tolist()
+            cc2.sp = 0
+        FUSED_STATS["staged_threads"] += 1
+        CACHE_STATS["classified"] += w2
+    return cc
+
+
+def run_fused(m: BatchedMachine, cfg: SimConfig, threads) -> list:
+    """Cross-thread fused scheduling loop — the batched engine's driver.
+
+    KEEP IN SYNC with simulator._run_scheduler: the scheduler selection
+    here is a verbatim copy (same wake condition, same (key, tid)
+    tie-break, same RANDOM rng stream), with the boundary-dense span
+    kernel fused INTO the scheduling loop. That fusion is what breaks the
+    per-quantum floor of the old per-thread span: the ~38 span environment
+    bindings and the four sequential float accumulator chains (core time
+    excepted — it is per-quantum by construction) live in loop locals for
+    the WHOLE run instead of being re-derived and re-flushed per quantum
+    (~4700 times in the ctx-bound cells), windows are sized by the staged
+    boundary predictions from _stage_windows instead of a blind multiple
+    of the run-length EWMA (so the four trace-column slices copy what the
+    quantum will actually consume), and every event is still live-probed
+    through the shared memoryviews, which keeps the kernel bit-exact under
+    any cross-thread churn: a stale prediction mis-sizes a window, it can
+    never mis-classify an event.
+
+    Vector-regime stretches (run lengths above cls_cache_min_run) flush
+    the localized stats and delegate the rest of the quantum to
+    batched_quantum, whose chunked classify/validate/apply machinery is
+    unchanged. Inline-only configs (tpp/astriflash: per-event RNG order)
+    and dram-only runs (pure vector path) use the plain scheduler around
+    batched_quantum directly. Returns the per-core clock list."""
+    if m._inline_only or cfg.dram_only:
+        return _run_scheduler(m, cfg, threads, batched_quantum)
+    m._threads = threads
+    st = m.stats
+    ds = m.state
+    # ---- scheduler state (verbatim from simulator._run_scheduler) ----
+    n_cores = cfg.n_cores
+    cores = [0.0] * n_cores
+    wslots_per_core = [[] for _ in range(n_cores)]
+    sched_counter = 0
+    nt = len(threads)
+    n_alive = nt
+    vrun = [0.0] * nt
+    last_sched = [0] * nt
+    use_cfs = cfg.sched_policy == "CFS"
+    use_random = cfg.sched_policy == "RANDOM"
+    heappush, heappop = heapq.heappush, heapq.heappop
+    insort = bisect.insort
+    wake_q = []
+    if use_random:
+        run_l = list(range(nt))  # all runnable at t=0, thread-index order
+        rng_choice = m.rng.choice
+    else:
+        keys = vrun if use_cfs else last_sched
+        run_q = [(0, ti) for ti in range(nt)]  # all runnable, key 0
+    # ---- span environment, hoisted ONCE for the whole run ----
+    (maybe_promote, compact, host, move_host, cres, cdirty, cstamp, csets,
+     cway, n_sets, ways, epoch_mv, journal, promoting, skybyte_count, acc,
+     promo_thr, lat_host, base, cache_idx, dram, lat_log, lat_cache,
+     ctx_ns, ctx_thr, chan_bus, chan_die, n_ch, t_read, rd_busy,
+     ftl_write, max_out, ctx_on, logbits, log_cap,
+     l2p, ppb, gc_from, gc_until) = m._span_env
+    block_route = l2p is not None
+    log_on = logbits is not None
+    lat_hist = st.lat_hist
+    lb = _lat_bin
+    journal_clear = journal.clear
+    # host tier only ever gains pages through _maybe_promote: constant gate
+    check_host = promoting or len(host) > 0
+    min_run = m._min_run
+    predict = m._predict
+    caches = m._caches
+    columns = m._columns
+    replay_lat = m._lat_cache
+    # Host-LRU moves are DEFERRED: the hit path appends the touched page
+    # to a buffer and the authoritative OrderedDict is only reordered at
+    # the points that actually read LRU order (_maybe_promote's demotion
+    # pop, the vector path's own move pass) — applied per unique page in
+    # ascending last-touch order, which reproduces the per-touch
+    # move_to_end order exactly (a page's final position is set by its
+    # LAST move). Membership (`p in host`, host.arr) is not affected by
+    # pending moves, so probes stay exact between flushes.
+    hbuf: list = []
+    hbuf_app = hbuf.append
+
+    def hflush():
+        if hbuf:
+            for q in reversed(dict.fromkeys(reversed(hbuf))):
+                move_host(q)
+            del hbuf[:]
+    if log_on:
+        log_active = ds.log_active
+        log_get = log_active.get
+    # ---- stats accumulators, localized across quanta (flushed around
+    # vector-path delegations, which read/write Stats directly) ----
+    n_acc = st.n
+    host_r_n = st.host_r
+    host_w_n = st.host_w
+    hit_log_n = st.hit_log
+    hit_cache_n = st.hit_cache
+    miss_n = st.miss_flash
+    ssd_w_n = st.ssd_w
+    ssd_w_var_n = st.ssd_w_var
+    ctx_sw_n = st.ctx_switches
+    replays_n = st.replays
+    lat_sum = st.lat_sum
+    lat_host_acc = st.lat_host
+    lat_hit_acc = st.lat_hit
+    lat_miss_acc = st.lat_miss
+    fused_n = 0
+
+    while n_alive:
+        # core with the earliest time (first minimal index)
+        t_now = min(cores)
+        c = cores.index(t_now)
+        if use_random:
+            while wake_q and wake_q[0][0] <= t_now:
+                insort(run_l, heappop(wake_q)[1])
+            if not run_l:
+                _advance_idle_cores(cores, t_now, wake_q[0][0])
+                continue
+            ti = rng_choice(run_l)
+            run_l.remove(ti)
+        else:
+            while wake_q and wake_q[0][0] <= t_now:
+                ti = heappop(wake_q)[1]
+                heappush(run_q, (keys[ti], ti))
+            if not run_q:
+                _advance_idle_cores(cores, t_now, wake_q[0][0])
+                continue
+            ti = heappop(run_q)[1]
+        sched_counter += 1
+        last_sched[ti] = sched_counter
+        th = threads[ti]
+        rdy = th.ready
+        t = t_now if t_now >= rdy else rdy
+        t0 = t
+        wslots = wslots_per_core[c]
+        # ---------------- one fused scheduling quantum ----------------
+        i = th.i
+        n = th.n
+        if th.replay:
+            # inlined _replay_prologue (§III-A 4): the replayed access is
+            # charged as an SSD DRAM hit; identical accounting order
+            th.replay = False
+            t += replay_lat
+            n_acc += 1
+            lat_sum += replay_lat
+            hit_cache_n += 1
+            lat_hit_acc += replay_lat
+            replays_n += 1
+            i += 1
+        journal_clear()  # only this quantum's boundary bumps matter
+        blocked = False
+        while i < n and not blocked:
+            if m.runlen >= min_run:
+                # vector regime: flush localized stats, hand the rest of
+                # the quantum to the chunked vector machinery, reload
+                th.i = i
+                st.n = n_acc
+                st.host_r = host_r_n
+                st.host_w = host_w_n
+                st.hit_log = hit_log_n
+                st.hit_cache = hit_cache_n
+                st.miss_flash = miss_n
+                st.ssd_w = ssd_w_n
+                st.ssd_w_var = ssd_w_var_n
+                st.ctx_switches = ctx_sw_n
+                st.replays = replays_n
+                st.lat_sum = lat_sum
+                st.lat_host = lat_host_acc
+                st.lat_hit = lat_hit_acc
+                st.lat_miss = lat_miss_acc
+                hflush()  # vector path reads and reorders the host LRU
+                t = batched_quantum(m, cfg, th, t, wslots)
+                n_acc = st.n
+                host_r_n = st.host_r
+                host_w_n = st.host_w
+                hit_log_n = st.hit_log
+                hit_cache_n = st.hit_cache
+                miss_n = st.miss_flash
+                ssd_w_n = st.ssd_w
+                ssd_w_var_n = st.ssd_w_var
+                ctx_sw_n = st.ctx_switches
+                replays_n = st.replays
+                lat_sum = st.lat_sum
+                lat_host_acc = st.lat_host
+                lat_hit_acc = st.lat_hit
+                lat_miss_acc = st.lat_miss
+                i = th.i
+                if log_on:  # compaction may have swapped the active dict
+                    log_active = ds.log_active
+                    log_get = log_active.get
+                break
+            # ---- fused kernel: one staged window ----
+            rint = int(m.runlen)
+            if predict:
+                cc = caches.get(th.tid)
+                if cc is None or i >= cc.hi or i < cc.lo:
+                    cc = _stage_windows(m, cfg, th, i)
+                sv = cc.sevens
+                sp = cc.sp
+                nsv = len(sv)
+                while sp < nsv and sv[sp] < i:
+                    sp += 1
+                cc.sp = sp
+                # window ends just past the next PREDICTED boundary; the
+                # run-length floor absorbs clustered false predictions
+                # (e.g. re-touches of a page inserted mid-window)
+                stop = sv[sp] + 1 if sp < nsv else cc.hi
+                floor_ = i + rint + 32
+                if stop < floor_:
+                    stop = floor_
+            elif ctx_on:
+                stop = i + rint + (rint >> 1) + 48
+            else:
+                stop = i + _SPAN
+            if stop > n:
+                stop = n
+            pages, lines, writes, gaps = columns(th)
+            cclk = ds.cache_clock
+            k = 0
+            slow_n = 0
+            bnd_n = 0
+            hp_last = -1  # host-LRU dedupe: consecutive touches are no-ops
+            if not log_on:
+                # ============== specialized no-write-log loop ==============
+                # KEEP IN SYNC with _inline_span's no-log loop (the scalar
+                # fallback): identical operation order per event, plus the
+                # fused-only micro-opts (host-move dedupe, persistent
+                # accumulators) that cannot change observable order. In this
+                # driver promotion is always the counting "skybyte" policy
+                # (stochastic policies took the plain-scheduler exit above).
+                for p, w, g in zip(pages[i:stop], writes[i:stop],
+                                   gaps[i:stop]):
+                    t += g
+                    k += 1
+                    if check_host and p in host:
+                        if p != hp_last:
+                            hbuf_app(p)  # deferred LRU move, see hflush
+                            hp_last = p
+                        if w:
+                            host_w_n += 1
+                        else:
+                            host_r_n += 1
+                        lat_sum += lat_host
+                        lat_host_acc += lat_host
+                        t += lat_host
+                        continue
+                    if cres[p]:
+                        cclk += 1
+                        cstamp[p] = cclk  # LRU touch (serve's lookup)
+                        if w:
+                            cdirty[p] = True  # mark_dirty
+                            ssd_w_n += 1
+                        else:
+                            hit_cache_n += 1
+                        if promoting:
+                            cnt2 = acc[p] + 1
+                            if cnt2 >= promo_thr:  # resident by construction
+                                hflush()
+                                ds.cache_clock = cclk
+                                maybe_promote(p, t)
+                                cclk = ds.cache_clock
+                                hp_last = -1
+                                bnd_n += 1
+                            else:
+                                acc[p] = cnt2
+                        lat_sum += lat_cache
+                        lat_hit_acc += lat_cache
+                        t += lat_cache
+                        continue
+                    if w:
+                        # Base-CSSD write miss: posted store, background
+                        # page fetch in a write slot
+                        stall = 0.0
+                        if len(wslots) >= max_out:
+                            oldest = min(wslots)
+                            wslots.remove(oldest)
+                            if oldest > t:
+                                stall = oldest - t
+                        if block_route:
+                            blk = l2p[p] // ppb
+                            ch = blk % n_ch
+                            dd = (blk // n_ch) % DIES_PER_CHANNEL
+                        else:
+                            ch = (p * 1103515245 + 12345) % n_ch
+                            dd = (p // n_ch) % DIES_PER_CHANNEL
+                        die = chan_die[ch]
+                        now2 = t + stall
+                        dv = die[dd]
+                        # background fetch: no GC-pause attribution
+                        sensed = (dv if dv > now2 else now2) + t_read
+                        bv = chan_bus[ch]
+                        done = (sensed if sensed > bv else bv) + TRANSFER_NS
+                        die[dd] = sensed
+                        chan_bus[ch] = done
+                        ds.chan_busy_ns += rd_busy
+                        ds.flash_reads += 1
+                        wslots.append(done)
+                        # inlined DataCache.insert(p, True) + write-back
+                        # (KEEP IN SYNC with _insert_miss)
+                        row = csets[p % n_sets]
+                        vw = 0
+                        vp = -1
+                        vs = None
+                        for w2 in range(ways):
+                            q = row[w2]
+                            if q < 0:
+                                vw = w2
+                                vp = -1
+                                break
+                            sq = cstamp[q]
+                            if vs is None or sq < vs:
+                                vs = sq
+                                vw = w2
+                                vp = q
+                        ec = ds.epoch_clock
+                        ev_dirty = False
+                        if vp >= 0:
+                            ev_dirty = cdirty[vp]
+                            cres[vp] = False
+                            cway[vp] = -1
+                            ec += 1
+                            epoch_mv[vp] = ec
+                            journal.append(vp)
+                        row[vw] = p
+                        cway[p] = vw
+                        cres[p] = True
+                        cdirty[p] = True
+                        cclk += 1
+                        cstamp[p] = cclk
+                        ec += 1
+                        epoch_mv[p] = ec
+                        journal.append(p)
+                        ds.epoch_clock = ec
+                        if ev_dirty:
+                            ftl_write(t, vp)  # full program incl. GC
+                            st.flash_write_pages += 1
+                        bnd_n += 1
+                        if promoting:
+                            cnt2 = acc[p] + 1
+                            if cnt2 >= promo_thr:  # just inserted
+                                hflush()
+                                ds.cache_clock = cclk
+                                maybe_promote(p, t)
+                                cclk = ds.cache_clock
+                                hp_last = -1
+                                bnd_n += 1
+                            else:
+                                acc[p] = cnt2
+                        ssd_w_n += 1
+                        lat = stall + base + cache_idx + dram
+                        if stall > 0.0:  # variable latency: histogram it
+                            ssd_w_var_n += 1
+                            lat_hist[lb(lat)] += 1
+                        lat_sum += lat
+                        lat_hit_acc += lat
+                        t += lat
+                        continue
+                    # ---- flash read miss (Algorithm 1 park decision) ----
+                    if block_route:
+                        blk = l2p[p] // ppb
+                        ch = blk % n_ch
+                        dd = (blk // n_ch) % DIES_PER_CHANNEL
+                    else:
+                        ch = (p * 1103515245 + 12345) % n_ch
+                        dd = (p // n_ch) % DIES_PER_CHANNEL
+                    die = chan_die[ch]
+                    dv = die[dd]
+                    bv = chan_bus[ch]
+                    if ctx_on:  # inlined Channels.estimate
+                        dw = dv - t
+                        bw = bv - t
+                        wait = dw if dw > bw else bw
+                        est = (wait if wait > 0.0 else 0.0) + t_read
+                    if dv > t:  # GC-pause attribution
+                        gu = gc_until[ch][dd]
+                        if gu > t:
+                            gf = gc_from[ch][dd]
+                            lo2 = t if t > gf else gf
+                            hi2 = dv if dv < gu else gu
+                            pause = hi2 - lo2
+                            if pause > 0.0:
+                                ds.gc_stall_events += 1
+                                ds.gc_pause_ns_total += pause
+                                if pause > ds.gc_pause_max_ns:
+                                    ds.gc_pause_max_ns = pause
+                    # inlined Channels.read
+                    sensed = (dv if dv > t else t) + t_read
+                    done = (sensed if sensed > bv else bv) + TRANSFER_NS
+                    die[dd] = sensed
+                    chan_bus[ch] = done
+                    ds.chan_busy_ns += rd_busy
+                    ds.flash_reads += 1
+                    # inlined DataCache.insert(p, False) + write-back
+                    # (KEEP IN SYNC with _insert_miss)
+                    row = csets[p % n_sets]
+                    vw = 0
+                    vp = -1
+                    vs = None
+                    for w2 in range(ways):
+                        q = row[w2]
+                        if q < 0:
+                            vw = w2
+                            vp = -1
+                            break
+                        sq = cstamp[q]
+                        if vs is None or sq < vs:
+                            vs = sq
+                            vw = w2
+                            vp = q
+                    ec = ds.epoch_clock
+                    ev_dirty = False
+                    if vp >= 0:
+                        ev_dirty = cdirty[vp]
+                        cres[vp] = False
+                        cway[vp] = -1
+                        ec += 1
+                        epoch_mv[vp] = ec
+                        journal.append(vp)
+                    row[vw] = p
+                    cway[p] = vw
+                    cres[p] = True
+                    cdirty[p] = False
+                    cclk += 1
+                    cstamp[p] = cclk
+                    ec += 1
+                    epoch_mv[p] = ec
+                    journal.append(p)
+                    ds.epoch_clock = ec
+                    if ev_dirty:
+                        ftl_write(t, vp)  # full program incl. GC
+                        st.flash_write_pages += 1
+                    if ctx_on and est > ctx_thr:
+                        ctx_sw_n += 1
+                        if promoting:
+                            cnt2 = acc[p] + 1
+                            if cnt2 >= promo_thr:  # just inserted
+                                hflush()
+                                ds.cache_clock = cclk
+                                maybe_promote(p, t)
+                                cclk = ds.cache_clock
+                                hp_last = -1
+                            else:
+                                acc[p] = cnt2
+                        slow_n += 1
+                        th.ready = done
+                        th.replay = True
+                        t += ctx_ns
+                        k -= 1  # squashed access: replayed after wakeup
+                        blocked = True
+                        break
+                    if promoting:
+                        cnt2 = acc[p] + 1
+                        if cnt2 >= promo_thr:  # just inserted
+                            hflush()
+                            ds.cache_clock = cclk
+                            maybe_promote(p, t)
+                            cclk = ds.cache_clock
+                            hp_last = -1
+                            bnd_n += 1
+                        else:
+                            acc[p] = cnt2
+                    bnd_n += 1
+                    lat = (done - t) + base + cache_idx + dram
+                    miss_n += 1
+                    lat_hist[lb(lat)] += 1
+                    lat_sum += lat
+                    lat_miss_acc += lat
+                    t += lat
+            else:
+                # ================= write-log loop (-W) =================
+                # KEEP IN SYNC with _inline_span's log loop. The active-
+                # buffer probe is memoized for consecutive same-page
+                # events (entry dicts mutate in place, so the memo stays
+                # valid until a compaction swaps the dict or a promotion
+                # runs — both reset it).
+                an = ds.log_active_n
+                lp_memo = -1
+                e_memo = None
+                for p, l, w, g in zip(pages[i:stop], lines[i:stop],
+                                      writes[i:stop], gaps[i:stop]):
+                    t += g
+                    k += 1
+                    if check_host and p in host:
+                        if p != hp_last:
+                            hbuf_app(p)  # deferred LRU move, see hflush
+                            hp_last = p
+                        if w:
+                            host_w_n += 1
+                        else:
+                            host_r_n += 1
+                        lat_sum += lat_host
+                        lat_host_acc += lat_host
+                        t += lat_host
+                        continue
+                    if p == lp_memo:
+                        e = e_memo
+                    else:
+                        e = log_get(p)
+                        lp_memo = p
+                        e_memo = e
+                    if w:
+                        # cacheline write-log append -> compact if full
+                        if e is None or l not in e:
+                            if e is None:
+                                e = log_active[p] = {}
+                                e_memo = e
+                            e[l] = True
+                            # no epoch bump: new lines are absorbed by the
+                            # vector path's per-chunk log overlay
+                            logbits[p] = logbits[p] | (1 << l)
+                            an += 1
+                            if an >= log_cap:  # filled: drain old buffer
+                                hflush()
+                                ds.log_active_n = an
+                                compact(t)
+                                log_active = ds.log_active
+                                log_get = log_active.get
+                                an = ds.log_active_n
+                                lp_memo = -1
+                                e_memo = None
+                                bnd_n += 1
+                        if promoting:
+                            cnt2 = acc[p] + 1
+                            if cnt2 >= promo_thr and cres[p]:
+                                hflush()
+                                ds.cache_clock = cclk
+                                maybe_promote(p, t)
+                                cclk = ds.cache_clock
+                                hp_last = -1
+                                lp_memo = -1
+                                e_memo = None
+                                bnd_n += 1
+                            else:
+                                acc[p] = cnt2
+                        ssd_w_n += 1
+                        lat_sum += lat_log
+                        lat_hit_acc += lat_log
+                        t += lat_log
+                        continue
+                    # ---- read ----
+                    if e is not None and l in e:
+                        if promoting:
+                            cnt2 = acc[p] + 1
+                            if cnt2 >= promo_thr and cres[p]:
+                                hflush()
+                                ds.cache_clock = cclk
+                                maybe_promote(p, t)
+                                cclk = ds.cache_clock
+                                hp_last = -1
+                                lp_memo = -1
+                                e_memo = None
+                                bnd_n += 1
+                            else:
+                                acc[p] = cnt2
+                        hit_log_n += 1
+                        lat_sum += lat_log
+                        lat_hit_acc += lat_log
+                        t += lat_log
+                        continue
+                    if cres[p]:
+                        cclk += 1
+                        cstamp[p] = cclk  # LRU touch
+                        if promoting:
+                            cnt2 = acc[p] + 1
+                            if cnt2 >= promo_thr:  # resident
+                                hflush()
+                                ds.cache_clock = cclk
+                                maybe_promote(p, t)
+                                cclk = ds.cache_clock
+                                hp_last = -1
+                                lp_memo = -1
+                                e_memo = None
+                                bnd_n += 1
+                            else:
+                                acc[p] = cnt2
+                        hit_cache_n += 1
+                        lat_sum += lat_cache
+                        lat_hit_acc += lat_cache
+                        t += lat_cache
+                        continue
+                    # ---- flash read miss (Algorithm 1 park decision) ----
+                    if block_route:
+                        blk = l2p[p] // ppb
+                        ch = blk % n_ch
+                        dd = (blk // n_ch) % DIES_PER_CHANNEL
+                    else:
+                        ch = (p * 1103515245 + 12345) % n_ch
+                        dd = (p // n_ch) % DIES_PER_CHANNEL
+                    die = chan_die[ch]
+                    dv = die[dd]
+                    bv = chan_bus[ch]
+                    if ctx_on:  # inlined Channels.estimate
+                        dw = dv - t
+                        bw = bv - t
+                        wait = dw if dw > bw else bw
+                        est = (wait if wait > 0.0 else 0.0) + t_read
+                    if dv > t:  # GC-pause attribution
+                        gu = gc_until[ch][dd]
+                        if gu > t:
+                            gf = gc_from[ch][dd]
+                            lo2 = t if t > gf else gf
+                            hi2 = dv if dv < gu else gu
+                            pause = hi2 - lo2
+                            if pause > 0.0:
+                                ds.gc_stall_events += 1
+                                ds.gc_pause_ns_total += pause
+                                if pause > ds.gc_pause_max_ns:
+                                    ds.gc_pause_max_ns = pause
+                    # inlined Channels.read
+                    sensed = (dv if dv > t else t) + t_read
+                    done = (sensed if sensed > bv else bv) + TRANSFER_NS
+                    die[dd] = sensed
+                    chan_bus[ch] = done
+                    ds.chan_busy_ns += rd_busy
+                    ds.flash_reads += 1
+                    # inlined DataCache.insert(p, False) + write-back
+                    # (KEEP IN SYNC with _insert_miss)
+                    row = csets[p % n_sets]
+                    vw = 0
+                    vp = -1
+                    vs = None
+                    for w2 in range(ways):
+                        q = row[w2]
+                        if q < 0:
+                            vw = w2
+                            vp = -1
+                            break
+                        sq = cstamp[q]
+                        if vs is None or sq < vs:
+                            vs = sq
+                            vw = w2
+                            vp = q
+                    ec = ds.epoch_clock
+                    ev_dirty = False
+                    if vp >= 0:
+                        ev_dirty = cdirty[vp]
+                        cres[vp] = False
+                        cway[vp] = -1
+                        ec += 1
+                        epoch_mv[vp] = ec
+                        journal.append(vp)
+                    row[vw] = p
+                    cway[p] = vw
+                    cres[p] = True
+                    cdirty[p] = False
+                    cclk += 1
+                    cstamp[p] = cclk
+                    ec += 1
+                    epoch_mv[p] = ec
+                    journal.append(p)
+                    ds.epoch_clock = ec
+                    if ev_dirty:
+                        ftl_write(t, vp)  # full program incl. GC
+                        st.flash_write_pages += 1
+                    lp_memo = -1  # write-back/GC may recycle log state
+                    e_memo = None
+                    if ctx_on and est > ctx_thr:
+                        ctx_sw_n += 1
+                        if promoting:
+                            cnt2 = acc[p] + 1
+                            if cnt2 >= promo_thr:  # just inserted
+                                hflush()
+                                ds.cache_clock = cclk
+                                maybe_promote(p, t)
+                                cclk = ds.cache_clock
+                                hp_last = -1
+                            else:
+                                acc[p] = cnt2
+                        slow_n += 1
+                        th.ready = done
+                        th.replay = True
+                        t += ctx_ns
+                        k -= 1  # squashed access: replayed after wakeup
+                        blocked = True
+                        break
+                    if promoting:
+                        cnt2 = acc[p] + 1
+                        if cnt2 >= promo_thr:  # just inserted
+                            hflush()
+                            ds.cache_clock = cclk
+                            maybe_promote(p, t)
+                            cclk = ds.cache_clock
+                            hp_last = -1
+                            bnd_n += 1
+                        else:
+                            acc[p] = cnt2
+                    bnd_n += 1
+                    lat = (done - t) + base + cache_idx + dram
+                    miss_n += 1
+                    lat_hist[lb(lat)] += 1
+                    lat_sum += lat
+                    lat_miss_acc += lat
+                    t += lat
+                ds.log_active_n = an
+            ds.cache_clock = cclk
+            if k:
+                m.runlen += 0.25 * (k / (slow_n + bnd_n + 1) - m.runlen)
+            fused_n += k
+            n_acc += k
+            i += k
+        th.i = i
+        vrun[ti] += t - t0
+        if i >= n and not th.replay:
+            th.done = True
+            n_alive -= 1
+        else:
+            heappush(wake_q, (th.ready, ti))
+        cores[c] = t
+
+    hflush()  # leave the host LRU in its authoritative final order
+    # final flush of the localized accumulators
+    st.n = n_acc
+    st.host_r = host_r_n
+    st.host_w = host_w_n
+    st.hit_log = hit_log_n
+    st.hit_cache = hit_cache_n
+    st.miss_flash = miss_n
+    st.ssd_w = ssd_w_n
+    st.ssd_w_var = ssd_w_var_n
+    st.ctx_switches = ctx_sw_n
+    st.replays = replays_n
+    st.lat_sum = lat_sum
+    st.lat_host = lat_host_acc
+    st.lat_hit = lat_hit_acc
+    st.lat_miss = lat_miss_acc
+    FUSED_STATS["fused_events"] += fused_n
+    return cores

@@ -67,6 +67,7 @@ keeps the engines' cached classification machinery untouched by routing.
 """
 from __future__ import annotations
 
+import heapq
 from typing import List, Tuple
 
 import numpy as np
@@ -208,6 +209,25 @@ class BlockFtl:
         self.program_ns = cfg.flash.program_ns
         self.erase_ns = cfg.flash.erase_ns
         self.n_channels = cfg.n_channels
+        # Greedy victim selection keeps a lazy min-heap of (valid, block)
+        # over sealed blocks instead of an argmin scan per GC round: an
+        # entry is pushed whenever a block seals and whenever a SEALED
+        # block loses a valid page, so for every sealed block the heap
+        # always holds an entry with its CURRENT count (counts only ever
+        # decrease while sealed; stale entries are strictly larger and
+        # are lazily discarded when they surface). Lexicographic (valid,
+        # block) order reproduces the argmin's first-minimal-index
+        # tie-break exactly. Cost-benefit keeps the vector scan: its
+        # age-dependent score changes with every seal, so no incremental
+        # order can be maintained.
+        if self.greedy:
+            fsx = self.fs
+            self._vic_heap = [
+                (int(v), b) for b, v in enumerate(fsx.blk_valid.tolist())
+                if fsx.blk_state_mv[b] == 2]
+            heapq.heapify(self._vic_heap)
+        else:
+            self._vic_heap = None
 
     # ---- physical service-path resolution ----
     def phys_loc(self, page: int) -> Tuple[int, int]:
@@ -224,7 +244,13 @@ class BlockFtl:
         fs = self.fs
         s = self.s
         ppb = fs.ppb
-        old = fs.l2p_mv[page]
+        l2p = fs.l2p_mv
+        p2l = fs.p2l_mv
+        pvalid = fs.pvalid_mv
+        bvalid = fs.blk_valid_mv
+        bstate = fs.blk_state_mv
+        vh = self._vic_heap
+        old = l2p[page]
         # rewrite heat must be read BEFORE the old copy is invalidated:
         # hot == the previous physical copy still sits in an open block
         # or one sealed within the heat window (the page's rewrite
@@ -233,16 +259,17 @@ class BlockFtl:
         # and GC's frontier recency says nothing about ITS rewrite rate
         ob = old // ppb
         hot = fs.hot_blk >= 0 and old >= 0 and not fs.blk_gc_mv[ob] and (
-            fs.blk_state_mv[ob] == 1
+            bstate[ob] == 1
             or fs.seal_seq - fs.blk_seal_mv[ob] <= fs.heat_win)
         b = fs.hot_blk if hot else fs.host_blk
         slot = fs.hot_slot if hot else fs.host_slot
         # charge the program at the destination block's channel/die
-        # (same bus->die recipe as Channels.write)
-        ch, d = blk_loc(b, self.n_channels)
+        # (same bus->die recipe as Channels.write; blk_loc inlined)
+        n_ch = self.n_channels
+        ch = b % n_ch
+        d = (b // n_ch) % DIES_PER_CHANNEL
         bus = s.chan_bus[ch]
-        xfer_start = now if now > bus else bus
-        xfer_end = xfer_start + TRANSFER_NS
+        xfer_end = (now if now > bus else bus) + TRANSFER_NS
         s.chan_bus[ch] = xfer_end
         die = s.chan_die[ch]
         dv = die[d]
@@ -250,9 +277,12 @@ class BlockFtl:
         s.chan_busy_ns += TRANSFER_NS + self.program_ns / DIES_PER_CHANNEL
         s.flash_writes += 1
         if old >= 0:  # invalidate the stale physical copy
-            fs.pvalid_mv[old] = False
-            fs.blk_valid_mv[ob] -= 1
-            fs.p2l_mv[old] = -1
+            pvalid[old] = False
+            nv = bvalid[ob] - 1
+            bvalid[ob] = nv
+            p2l[old] = -1
+            if vh is not None and bstate[ob] == 2:
+                heapq.heappush(vh, (nv, ob))
         pp = b * ppb + slot
         # Install the mapping BEFORE any seal/GC: if this program fills
         # the frontier and every earlier slot was already invalidated
@@ -260,15 +290,17 @@ class BlockFtl:
         # count zero valid pages, get picked as the GC victim, and be
         # erased with the in-flight page's mapping still pending —
         # silently losing the write when the slot is reallocated.
-        fs.l2p_mv[page] = pp
-        fs.p2l_mv[pp] = page
-        fs.pvalid_mv[pp] = True
-        fs.blk_valid_mv[b] += 1
+        l2p[page] = pp
+        p2l[pp] = page
+        pvalid[pp] = True
+        bvalid[b] += 1
         slot += 1
         if slot >= ppb:  # frontier sealed: GC if the pool runs low
-            fs.blk_state_mv[b] = 2
+            bstate[b] = 2
             fs.seal_seq += 1
             fs.blk_seal_mv[b] = fs.seal_seq
+            if vh is not None:
+                heapq.heappush(vh, (bvalid[b], b))
             if len(fs.free) <= fs.reserve:
                 self._collect(now)
             nb = self._pop_free()
@@ -331,12 +363,22 @@ class BlockFtl:
     def _pick_victim(self) -> int:
         """Deterministic victim among sealed blocks (-1 if none)."""
         fs = self.fs
+        vh = self._vic_heap
+        if vh is not None:  # greedy: lazy heap, see __init__
+            bstate = fs.blk_state_mv
+            bvalid = fs.blk_valid_mv
+            while vh:
+                v, b = vh[0]
+                if bstate[b] == 2 and bvalid[b] == v:
+                    # entry stays at the top: it is invalidated by the
+                    # erase (state 0) or superseded by a smaller count,
+                    # and discarded on a later pass either way
+                    return b
+                heapq.heappop(vh)
+            return -1
         sealed = fs.blk_state == 2
         if not sealed.any():
             return -1
-        if self.greedy:
-            cand = np.where(sealed, fs.blk_valid, np.int64(1 << 60))
-            return int(cand.argmin())
         # cost-benefit: (1 - u) / (1 + u) * age, u = valid/ppb, age in
         # seal-sequence ticks; first-maximal block index on ties
         v = fs.blk_valid.astype(np.float64)
@@ -375,17 +417,112 @@ class BlockFtl:
             + n_live * TRANSFER_NS
         s.chan_busy_ns += self.erase_ns / DIES_PER_CHANNEL + n_live * (
             TRANSFER_NS + self.read_ns / DIES_PER_CHANNEL)
-        # migrate live pages to the GC frontier (program timing charged
-        # per page on the frontier block's channel/die inside _alloc_gc)
-        for off in live.tolist():
-            pp_old = base + off
-            lp = fs.p2l_mv[pp_old]
-            pp_new = self._alloc_gc(now)
-            fs.l2p_mv[lp] = pp_new
-            fs.p2l_mv[pp_new] = lp
-            fs.pvalid_mv[pp_new] = True
-            fs.blk_valid_mv[pp_new // ppb] += 1
-            fs.p2l_mv[pp_old] = -1
+        # migrate live pages to the GC frontier. Each page's program cost
+        # (bus transfer -> die program, GC-window merge) must stay a
+        # sequential float chain for bit-exactness, so the per-page body
+        # is scalar — but frontier state, mapping memoryviews, and the
+        # block's (channel, die) resolution are hoisted per frontier
+        # SEGMENT (the run of pages landing in one GC block). Seal/pop
+        # bookkeeping moves to the segment end: nothing between a
+        # segment's programs reads blk_state/free/blk_erase, and a page's
+        # timing is charged at the block it landed in either way, so the
+        # final state is identical to the old per-page _alloc_gc calls.
+        if n_live:
+            program_ns = self.program_ns
+            busy_inc = TRANSFER_NS + program_ns / DIES_PER_CHANNEL
+            l2p = fs.l2p_mv
+            p2l = fs.p2l_mv
+            pvalid = fs.pvalid_mv
+            chan_bus = s.chan_bus
+            gdf = s.gc_die_from
+            gdu = s.gc_die_until
+            busy = s.chan_busy_ns
+            inv_np = base + live
+            lps_np = fs.p2l[inv_np]
+            lps = offs = None  # listed lazily: only short segments need it
+            n_ch = self.n_channels
+            vh = self._vic_heap
+            heappush = heapq.heappush
+            arange = np.arange
+            x = 0
+            while x < n_live:
+                b2 = fs.gc_blk
+                slot = fs.gc_slot
+                seg = ppb - slot
+                if seg > n_live - x:
+                    seg = n_live - x
+                ch2 = b2 % n_ch
+                d2 = (b2 // n_ch) % DIES_PER_CHANNEL
+                die2 = s.chan_die[ch2]
+                gu_row = gdu[ch2]
+                bus2 = chan_bus[ch2]
+                dv2 = die2[d2]
+                gu = gu_row[d2]
+                gf = gdf[ch2][d2]
+                pp0 = b2 * ppb + slot
+                # first page: full recipe (bus/die frontiers may lag now)
+                bus2 = (now if now > bus2 else bus2) + TRANSFER_NS
+                st2 = now if now > dv2 else dv2
+                dv2 = st2 + program_ns
+                # migration programs are GC work: extend/merge the window
+                if st2 > gu:
+                    gf = st2
+                busy += busy_inc
+                # pages 2..seg: after the first program, bus2 and dv2 sit
+                # strictly past `now` and each page's start time equals
+                # the previous page's die frontier (st2 == dv2 == gu), so
+                # the max() comparisons and the window-from update are
+                # provable no-ops — the chain degenerates, bit-exactly,
+                # to three sequential float adds per page.
+                for _ in range(seg - 1):
+                    bus2 += TRANSFER_NS
+                    dv2 += program_ns
+                    busy += busy_inc
+                gu = dv2
+                # mapping scatter: nothing between a segment's programs
+                # reads the mapping, and source (victim b) / destination
+                # (frontier b2) slots are disjoint, so the per-page
+                # interleave can collapse to bulk array ops; below the
+                # dispatch break-even the scalar loop stays cheaper
+                if seg >= 24:
+                    seg_lps = lps_np[x:x + seg]
+                    fs.l2p[seg_lps] = arange(pp0, pp0 + seg)
+                    fs.p2l[pp0:pp0 + seg] = seg_lps
+                    fs.pvalid[pp0:pp0 + seg] = True
+                    fs.p2l[inv_np[x:x + seg]] = -1
+                else:
+                    if lps is None:
+                        lps = lps_np.tolist()
+                        offs = live.tolist()
+                    pp_new = pp0
+                    for i in range(x, x + seg):
+                        lp = lps[i]
+                        l2p[lp] = pp_new
+                        p2l[pp_new] = lp
+                        pvalid[pp_new] = True
+                        p2l[base + offs[i]] = -1
+                        pp_new += 1
+                chan_bus[ch2] = bus2
+                die2[d2] = dv2
+                gu_row[d2] = gu
+                gdf[ch2][d2] = gf
+                fs.blk_valid_mv[b2] += seg
+                x += seg
+                slot += seg
+                if slot >= ppb:  # GC frontier sealed: open a fresh block
+                    fs.blk_state_mv[b2] = 2
+                    fs.seal_seq += 1
+                    fs.blk_seal_mv[b2] = fs.seal_seq
+                    if vh is not None:
+                        heappush(vh, (fs.blk_valid_mv[b2], b2))
+                    nb = self._pop_free()
+                    fs.blk_state_mv[nb] = 1
+                    fs.blk_gc_mv[nb] = True  # GC-written data: never "hot"
+                    fs.gc_blk = nb
+                    fs.gc_slot = 0
+                else:
+                    fs.gc_slot = slot
+            s.chan_busy_ns = busy
         s.gc_migrated_pages += n_live
         # erase the victim back into the pool
         fs.pvalid[base:base + ppb] = False
@@ -395,43 +532,6 @@ class BlockFtl:
         fs.free.append(b)
         s.gc_events += 1
         return True
-
-    def _alloc_gc(self, now: float) -> int:
-        """Next GC-frontier slot + its program's channel/bus/die time.
-        Never triggers GC itself: _collect runs with free > reserve - 1
-        >= 1 and one migration seals the GC frontier at most once."""
-        fs = self.fs
-        s = self.s
-        ppb = fs.ppb
-        b = fs.gc_blk
-        slot = fs.gc_slot
-        pp = b * ppb + slot
-        slot += 1
-        if slot >= ppb:
-            fs.blk_state_mv[b] = 2
-            fs.seal_seq += 1
-            fs.blk_seal_mv[b] = fs.seal_seq
-            nb = self._pop_free()
-            fs.blk_state_mv[nb] = 1
-            fs.blk_gc_mv[nb] = True  # GC-written data: never "hot"
-            fs.gc_blk = nb
-            fs.gc_slot = 0
-        else:
-            fs.gc_slot = slot
-        ch, d = blk_loc(b, self.n_channels)
-        bus = s.chan_bus[ch]
-        s.chan_bus[ch] = (now if now > bus else bus) + TRANSFER_NS
-        die = s.chan_die[ch]
-        dv = die[d]
-        start = now if now > dv else dv
-        die[d] = start + self.program_ns
-        # migration programs are GC work: extend/merge the carved window
-        if start > s.gc_die_until[ch][d]:
-            s.gc_die_from[ch][d] = start
-        s.gc_die_until[ch][d] = die[d]
-        s.chan_busy_ns += TRANSFER_NS + self.program_ns / DIES_PER_CHANNEL
-        return pp
-
 
 def check_invariants(fs: FlashState) -> None:
     """Assert the valid-count / bitmap / mapping invariants (test hook)."""

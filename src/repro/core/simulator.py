@@ -445,6 +445,83 @@ def _reference_quantum(m: Machine, cfg: SimConfig, th: Thread, t: float,
     return t
 
 
+def _run_scheduler(m: Machine, cfg: SimConfig, threads: List[Thread],
+                   runner) -> List[float]:
+    """Scheduler driver: dense per-thread state + two priority queues.
+
+    Per-thread wake time / CFS vruntime / RR last-sched stamp live in
+    dense lists; selection runs on two small heaps instead of a per-
+    quantum scan over thread objects: a *wake queue* ordered by wake
+    time and a *run queue* ordered by (policy key, thread index). Every
+    non-done thread sits in exactly one queue, keys only change while a
+    thread is OUT of its queue (vruntime/last_sched change when it runs,
+    wake time when it parks), so entries are never stale. The (key, tid)
+    tuple ordering reproduces the historical candidate scan exactly:
+    same wake condition (ready <= t_now), same first-minimal-thread-
+    index tie-break. RANDOM keeps an index-ordered runnable list so its
+    rng.choice stream is unchanged.
+
+    KEEP IN SYNC with engine.run_fused, which reproduces this selection
+    logic verbatim (same wake condition, same tie-breaks, same RANDOM rng
+    stream) with the boundary-dense span kernel fused into the loop.
+    Returns the per-core clock list."""
+    n_cores = cfg.n_cores
+    cores = [0.0] * n_cores
+    wslots_per_core: List[List[float]] = [[] for _ in range(n_cores)]
+    sched_counter = 0
+    nt = len(threads)
+    n_alive = nt
+    vrun = [0.0] * nt
+    last_sched = [0] * nt
+    use_cfs = cfg.sched_policy == "CFS"
+    use_random = cfg.sched_policy == "RANDOM"
+    heappush, heappop = heapq.heappush, heapq.heappop
+    wake_q: List[Tuple[float, int]] = []
+    if use_random:
+        run_l = list(range(nt))  # all runnable at t=0, thread-index order
+        rng_choice = m.rng.choice
+    else:
+        keys = vrun if use_cfs else last_sched
+        run_q = [(0, ti) for ti in range(nt)]  # all runnable, key 0
+
+    while n_alive:
+        # core with the earliest time (first minimal index, like
+        # min(range, key))
+        t_now = min(cores)
+        c = cores.index(t_now)
+        if use_random:
+            while wake_q and wake_q[0][0] <= t_now:
+                bisect.insort(run_l, heappop(wake_q)[1])
+            if not run_l:
+                _advance_idle_cores(cores, t_now, wake_q[0][0])
+                continue
+            ti = rng_choice(run_l)
+            run_l.remove(ti)
+        else:
+            while wake_q and wake_q[0][0] <= t_now:
+                ti = heappop(wake_q)[1]
+                heappush(run_q, (keys[ti], ti))
+            if not run_q:
+                _advance_idle_cores(cores, t_now, wake_q[0][0])
+                continue
+            ti = heappop(run_q)[1]
+        sched_counter += 1
+        last_sched[ti] = sched_counter
+        th = threads[ti]
+        r = th.ready
+        t = t_now if t_now >= r else r
+        t0 = t
+        t = runner(m, cfg, th, t, wslots_per_core[c])
+        vrun[ti] += t - t0
+        if th.i >= th.n and not th.replay:
+            th.done = True
+            n_alive -= 1
+        else:
+            heappush(wake_q, (th.ready, ti))
+        cores[c] = t
+    return cores
+
+
 def _advance_idle_cores(cores: List[float], t_now: float, wake: float) -> None:
     """No thread is runnable at t_now: jump every core sitting before the
     next wake time straight to it. Equivalent to the historical
@@ -498,84 +575,17 @@ def simulate(
         use_batched = _engine.supported(cfg)
     if use_batched:
         _engine.reset_cache_stats()
+        _engine.reset_fused_stats()
         m = _engine.BatchedMachine(cfg, seed, page_space)
-        runner = _engine.batched_quantum
+        # fused cross-thread driver: scheduler + span kernel in one loop
+        # (same selection semantics as _run_scheduler)
+        cores = _engine.run_fused(m, cfg, threads)
     else:
         m = Machine(cfg, seed, page_space)
-        runner = _reference_quantum
+        cores = _run_scheduler(m, cfg, threads, _reference_quantum)
 
     st = m.stats
     ds = m.state
-    n_cores = cfg.n_cores
-    cores = [0.0] * n_cores
-    wslots_per_core: List[List[float]] = [[] for _ in range(n_cores)]
-    policy = cfg.sched_policy
-    sched_counter = 0
-
-    # ---- scheduler: dense per-thread state + two priority queues ----
-    # Per-thread wake time / CFS vruntime / RR last-sched stamp live in
-    # dense lists; selection runs on two small heaps instead of a per-
-    # quantum scan over thread objects: a *wake queue* ordered by wake
-    # time and a *run queue* ordered by (policy key, thread index). Every
-    # non-done thread sits in exactly one queue, keys only change while a
-    # thread is OUT of its queue (vruntime/last_sched change when it runs,
-    # wake time when it parks), so entries are never stale. The (key, tid)
-    # tuple ordering reproduces the historical candidate scan exactly:
-    # same wake condition (ready <= t_now), same first-minimal-thread-
-    # index tie-break. RANDOM keeps an index-ordered runnable list so its
-    # rng.choice stream is unchanged.
-    nt = len(threads)
-    INF = float("inf")
-    n_alive = nt
-    vrun = [0.0] * nt
-    last_sched = [0] * nt
-    use_cfs = policy == "CFS"
-    use_random = policy == "RANDOM"
-    heappush, heappop = heapq.heappush, heapq.heappop
-    wake_q: List[Tuple[float, int]] = []
-    if use_random:
-        run_l = list(range(nt))  # all runnable at t=0, thread-index order
-        rng_choice = m.rng.choice
-    else:
-        keys = vrun if use_cfs else last_sched
-        run_q = [(0, ti) for ti in range(nt)]  # all runnable, key 0
-
-    while n_alive:
-        # core with the earliest time (first minimal index, like
-        # min(range, key))
-        t_now = min(cores)
-        c = cores.index(t_now)
-        if use_random:
-            while wake_q and wake_q[0][0] <= t_now:
-                bisect.insort(run_l, heappop(wake_q)[1])
-            if not run_l:
-                _advance_idle_cores(cores, t_now, wake_q[0][0])
-                continue
-            ti = rng_choice(run_l)
-            run_l.remove(ti)
-        else:
-            while wake_q and wake_q[0][0] <= t_now:
-                ti = heappop(wake_q)[1]
-                heappush(run_q, (keys[ti], ti))
-            if not run_q:
-                _advance_idle_cores(cores, t_now, wake_q[0][0])
-                continue
-            ti = heappop(run_q)[1]
-        sched_counter += 1
-        last_sched[ti] = sched_counter
-        th = threads[ti]
-        r = th.ready
-        t = t_now if t_now >= r else r
-        t0 = t
-        t = runner(m, cfg, th, t, wslots_per_core[c])
-        vrun[ti] += t - t0
-        if th.i >= th.n and not th.replay:
-            th.done = True
-            n_alive -= 1
-        else:
-            heappush(wake_q, (th.ready, ti))
-        cores[c] = t
-
     exec_ns = max(cores)
     st.exec_ns = exec_ns
     st.busy_ns = ds.chan_busy_ns

@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import logging
 import os
 import tempfile
 from pathlib import Path
@@ -207,12 +208,16 @@ def gen_thread_trace(
 #     are atomic (tmp + rename) so parallel grid workers can race safely,
 #     and only streams up to _DISK_CACHE_MAX_EVENTS are persisted (larger
 #     ones are cheap relative to their simulation and would bloat
-#     artifacts/). Storing compressed (zlib packs the skewed page/line
-#     columns ~3-4x) is what allows the cap to sit at 8M events — the
-#     full-length 1.5M-request fig14/17/18 grids now hit the disk layer.
-#     The directory's TOTAL size is bounded too (REPRO_TRACE_CACHE_GB,
-#     default 2 GB): past the cap the least-recently-used npz files are
-#     evicted after each store, so grid sweeps can't grow it unboundedly.
+#     artifacts/). Artifacts are stored UNcompressed: the load path sits
+#     on the paired-benchmark critical path and zlib decompression cost
+#     (~20 ms per 200k-event stream) dwarfs the disk saving on a local
+#     cache. The directory's TOTAL size is what is bounded instead
+#     (REPRO_TRACE_CACHE_GB, default 2 GB): past the cap the least-
+#     recently-used npz files are evicted after each store — and since
+#     the filename key fingerprints this file, stale compressed
+#     artifacts from older generators age out through the same path.
+#     Each eviction pass logs a one-line count/bytes summary (logger
+#     "repro.core.traces") so sweep jobs can see cache churn.
 # Callers treat the returned arrays as read-only (the simulator copies
 # the one column it re-types, gap_ns -> float64).
 # ---------------------------------------------------------------------------
@@ -227,6 +232,8 @@ _DISK_CACHE_MAX_EVENTS = 8_000_000
 # <= 0 disables the bound.
 _DISK_CACHE_DEFAULT_GB = 2.0
 
+_LOG = logging.getLogger(__name__)
+
 
 def _disk_cache_cap_bytes() -> int:
     raw = os.environ.get("REPRO_TRACE_CACHE_GB", "")
@@ -237,13 +244,16 @@ def _disk_cache_cap_bytes() -> int:
     return int(gb * (1 << 30))
 
 
-def _evict_lru(keep: Path) -> None:
+def _evict_lru(keep: Path) -> int:
     """Shrink the trace cache below the size cap, oldest-mtime first
     (mtime is refreshed on every cache hit, so eviction order is LRU).
-    Best-effort: races with parallel grid workers just skip entries."""
+    Best-effort: races with parallel grid workers just skip entries.
+    Returns the number of artifacts evicted and logs a one-line summary
+    when pruning actually triggered (it used to be silent, which made
+    cache-thrash during grid sweeps invisible)."""
     cap = _disk_cache_cap_bytes()
     if cap <= 0:
-        return
+        return 0
     entries = []
     total = 0
     for p in _TRACE_DIR.glob("*.npz"):
@@ -253,18 +263,27 @@ def _evict_lru(keep: Path) -> None:
             continue
         entries.append((st.st_mtime, st.st_size, p))
         total += st.st_size
-    if total <= cap:
-        return
-    for _, size, p in sorted(entries):
-        if p == keep:  # never evict the artifact just written
-            continue
-        try:
-            p.unlink()
-        except OSError:
-            continue
-        total -= size
-        if total <= cap:
-            return
+    evicted = 0
+    freed = 0
+    if total > cap:
+        for _, size, p in sorted(entries):
+            if p == keep:  # never evict the artifact just written
+                continue
+            try:
+                p.unlink()
+            except OSError:
+                continue
+            evicted += 1
+            freed += size
+            total -= size
+            if total <= cap:
+                break
+    if evicted:
+        _LOG.info(
+            "trace cache: evicted %d artifact(s), freed %.1f MiB "
+            "(cap %.2f GiB, now %.1f MiB)", evicted, freed / (1 << 20),
+            cap / (1 << 30), total / (1 << 20))
+    return evicted
 
 
 @functools.lru_cache(maxsize=1)
@@ -302,7 +321,9 @@ def _store_traces(path: Path, traces: List[Dict[str, np.ndarray]]) -> None:
     fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".npz.tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez_compressed(f, **arrays)
+            # uncompressed: load time beats disk footprint for a local,
+            # LRU-bounded cache (see the cache design note above)
+            np.savez(f, **arrays)
         os.replace(tmp, path)  # atomic vs concurrent grid workers
     except BaseException:
         try:

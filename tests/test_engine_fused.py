@@ -1,0 +1,102 @@
+"""Fused cross-thread boundary engine: conflict-fallback parity.
+
+core/engine.run_fused processes each runnable thread's events in staged
+windows; any same-set cache collision, same-l2p retouch (a page rewritten
+or GC-migrated and re-read inside one window), promotion, log fill, or GC
+must resolve through the exact per-event kernel paths or the scalar span
+fallback. These sweeps shrink the cache to one way, the flash array to
+GC-churn size, and the host tier to a few dozen pages so collisions are
+guaranteed WITHIN single windows, then assert parity with the reference
+loop — bit-exact equality, not approximate: the fused kernel replays the
+reference's sequential float-addition order, so every output value must
+be identical down to the last bit."""
+import dataclasses
+
+import pytest
+
+from repro.configs.base import SimConfig, VARIANTS
+from repro.core import engine as _engine
+from repro.core.simulator import simulate
+
+from tests._hypothesis_compat import given, settings, st
+
+# Collision-forcing overrides: one-way sets make every same-set pair of
+# pages a conflict; a small flash array + tiny write log keep l2p entries
+# churning (GC migrations + compaction flushes), so windows see same-set
+# and same-l2p collisions back to back.
+CONFLICT_OVER = dict(
+    cache_ways=1, ssd_dram_bytes=32 << 20, flash_bytes=2 << 30,
+    write_log_bytes=1 << 20, host_dram_bytes=64 << 20,
+)
+
+
+def _run(engine, workload, variant, n, seed=0, **overrides):
+    cfg = dataclasses.replace(SimConfig(), engine=engine, **overrides)
+    return simulate(workload, variant, cfg, total_req=n, seed=seed)
+
+
+def _assert_bit_exact(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        assert a[k] == b[k], (k, a[k], b[k])
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_fused_conflict_window_parity(variant):
+    """Same-set/same-l2p collisions inside one window, all 8 variants."""
+    a = _run("reference", "tpcc", variant, n=12_000, **CONFLICT_OVER)
+    b = _run("batched", "tpcc", variant, n=12_000, **CONFLICT_OVER)
+    _assert_bit_exact(a, b)
+
+
+def test_fused_conflict_window_actually_conflicts():
+    """The collision config must really churn mappings mid-window (GC
+    migrations rewrite l2p entries that later events re-read), otherwise
+    the sweep above proves nothing."""
+    out = _run("batched", "tpcc", "skybyte-w", n=12_000, **CONFLICT_OVER)
+    assert out["gc_events"] > 0
+    assert out["compactions"] > 0
+    assert _engine.FUSED_STATS["fused_events"] > 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(["bfs-dense", "srad", "tpcc", "radix"]),
+       st.sampled_from(VARIANTS),
+       st.integers(min_value=0, max_value=5),
+       st.sampled_from(["greedy", "cost-benefit"]),
+       st.booleans())
+def test_fused_window_property_sweep(workload, variant, seed, gc_policy,
+                                     wear):
+    """Randomized cells under collision pressure stay bit-exact, across
+    both GC victim policies (lazy-heap greedy and the cost-benefit scan)
+    and wear-leveling free-pool picks."""
+    over = dict(CONFLICT_OVER, gc_policy=gc_policy, wear_leveling=wear)
+    a = _run("reference", workload, variant, n=6_000, seed=seed, **over)
+    b = _run("batched", workload, variant, n=6_000, seed=seed, **over)
+    _assert_bit_exact(a, b)
+
+
+@pytest.mark.parametrize("variant", ["skybyte-c", "skybyte-cp"])
+def test_fused_predict_window_parity(variant, monkeypatch):
+    """REPRO_FUSED_PREDICT=1 turns on staged boundary prediction (window
+    sizing from pre-classified code-7 positions). Sizing is advisory, so
+    the path must stay bit-exact — and must actually engage."""
+    monkeypatch.setenv("REPRO_FUSED_PREDICT", "1")
+    b = _run("batched", "bfs-dense", variant, n=12_000)
+    assert _engine.FUSED_STATS["stage_rounds"] > 0, \
+        "prediction path did not engage"
+    monkeypatch.delenv("REPRO_FUSED_PREDICT")
+    a = _run("reference", "bfs-dense", variant, n=12_000)
+    _assert_bit_exact(a, b)
+
+
+def test_fused_stats_accounting():
+    """FUSED_STATS is reset per batched run and splits the cell's events
+    between the fused kernel, the vector path, and the span fallback;
+    fused_fraction stays a valid ratio."""
+    out = _run("batched", "bfs-dense", "skybyte-c", n=12_000)
+    s = _engine.FUSED_STATS
+    assert s["fused_events"] > 0
+    total = s["fused_events"] + s["vector_events"] + s["span_events"]
+    assert 0 < total <= out["n"]
+    assert 0.0 <= _engine.fused_fraction(out["n"]) <= 1.0

@@ -106,3 +106,46 @@ def test_write_log_capacity_monotonic(log_mb):
     small = simulate("srad", "skybyte-w", cfg=cfg_small, total_req=N)
     big = simulate("srad", "skybyte-w", cfg=cfg_big, total_req=N)
     assert big["compactions"] <= small["compactions"]
+
+
+def test_trace_cache_eviction_logs_summary(tmp_path, monkeypatch, caplog):
+    """REPRO_TRACE_CACHE_GB pruning used to be silent; the LRU eviction
+    pass must log a one-line count/bytes summary and actually shrink the
+    directory, never touching the just-written artifact."""
+    import logging
+    import os
+
+    from repro.core import traces as tr
+
+    monkeypatch.setattr(tr, "_TRACE_DIR", tmp_path)
+    # three 1 MiB artifacts against a ~2 MiB cap -> one eviction
+    paths = []
+    for i in range(3):
+        p = tmp_path / f"fake_{i}.npz"
+        p.write_bytes(b"\0" * (1 << 20))
+        os.utime(p, (1_000_000 + i, 1_000_000 + i))  # distinct LRU order
+        paths.append(p)
+    monkeypatch.setenv("REPRO_TRACE_CACHE_GB", str(2.5 / 1024))
+    with caplog.at_level(logging.INFO, logger="repro.core.traces"):
+        evicted = tr._evict_lru(keep=paths[0])
+    assert evicted == 1
+    assert not paths[1].exists()  # oldest non-kept artifact went first
+    assert paths[0].exists() and paths[2].exists()
+    assert any("evicted 1 artifact" in r.message for r in caplog.records)
+
+
+def test_trace_cache_eviction_silent_when_under_cap(tmp_path, monkeypatch,
+                                                    caplog):
+    """No pruning -> no log line (the summary must not spam every store)."""
+    import logging
+
+    from repro.core import traces as tr
+
+    monkeypatch.setattr(tr, "_TRACE_DIR", tmp_path)
+    p = tmp_path / "fake.npz"
+    p.write_bytes(b"\0" * 1024)
+    monkeypatch.setenv("REPRO_TRACE_CACHE_GB", "1")
+    with caplog.at_level(logging.INFO, logger="repro.core.traces"):
+        assert tr._evict_lru(keep=p) == 0
+    assert p.exists()
+    assert not caplog.records
