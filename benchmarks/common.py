@@ -238,28 +238,59 @@ def warm_cache(cells: List[Dict[str, Any]], jobs: int = 1,
     t0 = time.time()
     jobs = max(1, min(jobs, len(todo)))
 
-    def drain(results) -> None:
-        for k, (name, req, cpu, wall, err, cls) in enumerate(results):
-            stats["req"] += req
-            stats["cpu_s"] += cpu
-            stats["wall_sum_s"] += wall
-            stats["cls_cache_checks"] += cls[0]
-            stats["cls_cache_clean"] += cls[1]
-            stats["cls_cache_repairs"] += cls[2]
-            if err:
-                stats["failed"] = stats.get("failed", 0) + 1
-                print(f"# warm [{k + 1}/{len(todo)}] {name} FAILED: {err}",
-                      flush=True)
-            elif verbose:
-                print(f"# warm [{k + 1}/{len(todo)}] {name} "
-                      f"({cpu:.0f}s cpu / {wall:.0f}s wall)", flush=True)
+    def record(k: int, res: Tuple, retried: bool = False) -> bool:
+        """Fold one worker result into stats; True iff the cell succeeded."""
+        name, req, cpu, wall, err, cls = res
+        stats["req"] += req
+        stats["cpu_s"] += cpu
+        stats["wall_sum_s"] += wall
+        stats["cls_cache_checks"] += cls[0]
+        stats["cls_cache_clean"] += cls[1]
+        stats["cls_cache_repairs"] += cls[2]
+        tag = " on retry" if retried else ""
+        if err:
+            print(f"# warm [{k + 1}/{len(todo)}] {name} FAILED{tag}: {err}",
+                  flush=True)
+            return False
+        if verbose:
+            print(f"# warm [{k + 1}/{len(todo)}] {name}{tag} "
+                  f"({cpu:.0f}s cpu / {wall:.0f}s wall)", flush=True)
+        return True
 
+    failed = []  # (index, spec) pending their one retry
     if jobs == 1:
-        drain(map(_warm_one, todo))
+        for k, spec in enumerate(todo):
+            if not record(k, _warm_one(spec)):
+                failed.append((k, spec))
     else:
         with ProcessPoolExecutor(max_workers=jobs) as ex:
-            futs = [ex.submit(_warm_one, spec) for spec in todo]
-            drain(f.result() for f in as_completed(futs))
+            futs = {ex.submit(_warm_one, spec): (k, spec)
+                    for k, spec in enumerate(todo)}
+            for f in as_completed(futs):
+                k, spec = futs[f]
+                try:
+                    res = f.result()
+                except Exception as e:  # noqa: BLE001
+                    # A worker that died hard (segfault, OOM kill) raises
+                    # BrokenProcessPool out of EVERY pending future —
+                    # containment in _warm_one never ran. Convert each to
+                    # a per-cell failure instead of letting one bad cell
+                    # abort the whole suite.
+                    res = (f"{spec['workload']}/{spec['variant']}", 0, 0.0,
+                           0.0, f"{type(e).__name__}: {e}", (0, 0, 0))
+                if not record(k, res):
+                    failed.append((k, spec))
+    # One retry per failed cell, serial and in-process: a broken pool must
+    # not take the retries down with it, and transient failures (OOM under
+    # a full fan-out, a racing artifact eviction) usually pass solo.
+    still_failed = []
+    for k, spec in sorted(failed):
+        if not record(k, _warm_one(spec), retried=True):
+            still_failed.append(f"{spec['workload']}/{spec['variant']}")
+    if still_failed:
+        # surfaced in BENCH_sim.json via run.py's report["grid"]
+        stats["failed"] = len(still_failed)
+        stats["failed_cells"] = still_failed
     stats["wall_s"] = time.time() - t0
     return stats
 

@@ -1,0 +1,117 @@
+"""Reliability figure (beyond-paper): fault-rate x variant sweep on the
+deterministic device fault model (core/faults.py).
+
+The paper's durability story — the cacheline write log persists across
+power loss — is asserted but never priced. This section quantifies three
+fault regimes and what the SkyByte mechanisms do under them:
+
+  * ``rate`` rows — per-read first-sense error rate sweep (the ECC
+    read-retry ladder): retry traffic, uncorrectable reads (UBER), and
+    the request latency tail. Retries extend die busy time, so read-heavy
+    workloads see the ladder directly in p99.
+  * ``crash`` rows — scheduled power-loss events: write-log replay volume
+    (durable lines re-programmed), dirty page-cache lines lost (what a
+    log-less variant gives up), and the recovery tail (max recovery time;
+    the triggering read's latency IS the host-visible outage).
+  * ``diefail`` rows — a whole-die hard failure mid-run: bad-block count,
+    valid pages remapped through the spare pool, and whether the device
+    ended degraded (read-only) — the graceful-degradation path.
+
+All fault draws are counter-hashed from (fault_seed, flash-read ordinal),
+so every cell is exactly reproducible and engine-independent (parity
+suites run with faults on; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import FaultConfig, SimConfig
+
+from benchmarks.common import cached_sim, collect_cells, print_csv
+
+TOTAL_REQ = 600_000
+# one read-heavy profile (the retry ladder prices into p99 directly) and
+# one write-heavy profile (log replay + GC interaction after a crash)
+WLS = ("bfs-dense", "srad")
+VARIANTS = ("base-cssd", "skybyte-full")
+# 0.0 anchors the healthy device (dedupes into the main grid's cells);
+# 1e-3..3e-2 spans "aging" to "end-of-life" first-sense failure rates
+ERROR_RATES = (0.0, 1e-3, 1e-2, 3e-2)
+# crash points in flash-read ordinals: early (cold cache, small log) and
+# warmed-up (replay volume shows the durability cost). Kept low enough
+# that even the most cache-friendly cell (srad/skybyte-full barely
+# misses: ~2k flash reads at --quick) still reaches the second point.
+CRASH_POINTS = (500, 2_000)
+DIE_FAIL_AT = 500
+
+
+def _row(wl, v, r, **extra):
+    row = {
+        "workload": wl, "variant": v, "sweep": "",
+        "error_rate": "", "crash_at": "", "die_fail_at": "",
+        "retry_reads": r.get("retry_reads", 0),
+        "uncorrectable": r.get("uncorrectable_reads", 0),
+        "uber": f"{r.get('uber', 0.0):.2e}",
+        "power_losses": r.get("power_loss_events", 0),
+        "replayed_pages": r.get("replayed_pages", 0),
+        "lost_dirty_pages": r.get("lost_dirty_pages", 0),
+        "recovery_ms": round(r.get("recovery_ns_max", 0.0) / 1e6, 3),
+        "die_failures": r.get("die_failures", 0),
+        "bad_blocks": r.get("bad_blocks", 0),
+        "remapped_pages": r.get("remapped_pages", 0),
+        "degraded": r.get("degraded_mode", 0),
+        "lat_p50_ns": round(r["lat_p50_ns"], 1),
+        "lat_p99_ns": round(r["lat_p99_ns"], 1),
+    }
+    row.update(extra)
+    return row
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = []
+    for wl in WLS:  # --- read-retry ladder: error-rate sweep ---
+        for v in VARIANTS:
+            for rate in ERROR_RATES:
+                cfg = dataclasses.replace(
+                    SimConfig(), fault=FaultConfig(read_error_rate=rate))
+                r = cached_sim(wl, v, cfg=cfg, total_req=total_req,
+                               force=force)
+                rows.append(_row(wl, v, r, sweep="rate", error_rate=rate))
+    for wl in WLS:  # --- power loss: write-log replay + recovery tail ---
+        for v in VARIANTS:
+            for crash in CRASH_POINTS:
+                cfg = dataclasses.replace(
+                    SimConfig(), fault=FaultConfig(power_loss_at=(crash,)))
+                r = cached_sim(wl, v, cfg=cfg, total_req=total_req,
+                               force=force)
+                rows.append(_row(wl, v, r, sweep="crash", crash_at=crash))
+    for wl in WLS:  # --- whole-die hard failure: remap through spares ---
+        for v in VARIANTS:
+            cfg = dataclasses.replace(
+                SimConfig(), fault=FaultConfig(die_fail_at=(DIE_FAIL_AT,)))
+            r = cached_sim(wl, v, cfg=cfg, total_req=total_req, force=force)
+            rows.append(_row(wl, v, r, sweep="diefail",
+                             die_fail_at=DIE_FAIL_AT))
+    return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig_faults (fault model: read-retry ladder rate sweep, "
+              "power-loss replay/recovery, die failure + degradation)",
+              rows, ["workload", "variant", "sweep", "error_rate",
+                     "crash_at", "die_fail_at", "retry_reads",
+                     "uncorrectable", "uber", "power_losses",
+                     "replayed_pages", "lost_dirty_pages", "recovery_ms",
+                     "die_failures", "bad_blocks", "remapped_pages",
+                     "degraded", "lat_p50_ns", "lat_p99_ns"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,7 @@ from benchmarks import (
     fig21_dramsize,
     fig22_flashlat,
     fig23_migration,
+    fig_faults,
     fig_gc_tail,
     tab3_readlat,
 )
@@ -63,6 +64,7 @@ SECTIONS = [
     ("fig22", fig22_flashlat, 600_000, 200_000),
     ("fig23", fig23_migration, 600_000, 200_000),
     ("gc_tail", fig_gc_tail, 600_000, 200_000),
+    ("faults", fig_faults, 600_000, 200_000),
 ]
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"

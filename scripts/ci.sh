@@ -12,6 +12,7 @@
 #   bash scripts/ci.sh gc         # block-FTL GC/tail figure in quick mode
 #   bash scripts/ci.sh addr       # physical-routing parity (engines x FTLs)
 #   bash scripts/ci.sh fused      # fused-boundary-engine conflict parity
+#   bash scripts/ci.sh faults     # fault model + crash-recovery suite
 #   bash scripts/ci.sh bench      # orchestrator smoke + baseline diff
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -83,12 +84,21 @@ if [[ "$STAGE" == "all" || "$STAGE" == "fused" ]]; then
     -k "fused or window or trace_cache"
 fi
 
+if [[ "$STAGE" == "all" || "$STAGE" == "faults" ]]; then
+  echo "== device fault model: parity under faults + crash recovery =="
+  # Every fault class (retry ladder, outages, power loss, die failure)
+  # firing with both engines bit-exact, replay idempotence after double
+  # crashes, and spare-exhaustion degrading read-only instead of raising.
+  python -m pytest -x -q tests/test_faults.py
+fi
+
 if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then
   echo "== benchmark orchestrator smoke (--quick, auto physical-core jobs) =="
   # Representative sections: fig14 covers the full 7x8 variant grid, fig9
   # covers per-cfg cache keys, gc_tail covers the block-FTL sweep (so the
-  # CPU-time gate below sees the flash backend). --profile prints req/s.
-  python -m benchmarks.run --quick --only fig14,fig9,gc_tail \
+  # CPU-time gate below sees the flash backend), faults covers the fault
+  # model's scheduler-path cells. --profile prints req/s.
+  python -m benchmarks.run --quick --only fig14,fig9,gc_tail,faults \
     --skip-roofline --profile
   test -f BENCH_sim.json && echo "BENCH_sim.json written"
   echo "== CPU-time diff vs committed baseline (wall is informational) =="

@@ -247,6 +247,68 @@ FLASH_CLASSES: Mapping[str, FlashTiming] = {
 
 
 @dataclass(frozen=True)
+class FaultConfig:
+    """Device fault-injection knobs (core/faults.py). All draws come from a
+    counter-based hash stream keyed by ``fault_seed`` and the device's
+    flash-read ordinal, so a cell's fault sequence is a pure function of
+    the config — both replay engines consume the identical stream and stay
+    bit-exact (see DESIGN.md "Fault model & crash recovery").
+
+    Every knob defaults to OFF (rate 0.0 / empty schedule): the zero-fault
+    config constructs no FaultModel at all, so the flawless-device figures
+    and their cache keys are unchanged and the hot path pays one
+    ``is not None`` test per flash read."""
+
+    # Per-read probability that the first ECC sense fails and the retry
+    # ladder engages. Real raw BERs sit around 1e-4..1e-2 *per bit*; here
+    # the rate is per PAGE READ because the simulator's unit of work is a
+    # page, so sweep values (fig_faults: 1e-3..3e-2) model end-of-life
+    # pages where a first-sense failure is a per-read-scale event.
+    read_error_rate: float = 0.0
+    # Geometric ladder: step k is reached with probability
+    # read_error_rate * retry_fail_ratio**k. 0.25 means each extra
+    # read-retry voltage shift recovers 3 of 4 remaining failures —
+    # the shape (most retries resolve in 1-2 steps, a thin tail walks the
+    # whole ladder) matches published read-retry distributions.
+    retry_fail_ratio: float = 0.25
+    # Ladder depth before the read is declared uncorrectable (counted in
+    # Stats.uncorrectable_reads / uber; the read still completes at
+    # max-ladder latency — the device returns poison, not a hang).
+    retry_steps: int = 4
+    # Latency each ladder step adds to the die's sense time. 0.0 (the
+    # default) means "one full re-sense", i.e. flash.read_ns — retries on
+    # real NAND re-issue the array read at a shifted reference voltage.
+    retry_step_ns: float = 0.0
+    # Transient die/channel outage: per-read probability that the target
+    # die is unavailable (firmware busy, channel CRC storm) and service
+    # starts late by outage_ns. 500us sits between a program (100us) and
+    # an erase (1ms): long enough to be a visible tail event.
+    outage_rate: float = 0.0
+    outage_ns: float = 500_000.0
+    # Whole-die hard failures: at each listed flash-read ordinal, the die
+    # that read targeted fails permanently — its blocks go bad, valid
+    # pages remap through the free pool (block backend only).
+    die_fail_at: Tuple[int, ...] = ()
+    # Scheduled power-loss events, again in flash-read ordinals (a
+    # deterministic virtual-time-free trigger both engines hit at the
+    # same instant). On each: in-flight programs and the volatile page
+    # cache are lost; the cacheline write log is durable (the paper's
+    # §III-B persistence claim) and is replayed against the FTL.
+    power_loss_at: Tuple[int, ...] = ()
+    # Fixed firmware restart cost added on top of replay time (FTL table
+    # scan, CXL link retrain) before the device serves again.
+    recovery_scan_ns: float = 1_000_000.0
+    # Seed for the fault draw stream, independent of the workload seed so
+    # fault placement can be varied against a fixed trace.
+    fault_seed: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return (self.read_error_rate > 0.0 or self.outage_rate > 0.0
+                or bool(self.die_fail_at) or bool(self.power_loss_at))
+
+
+@dataclass(frozen=True)
 class SimConfig:
     """CXL-SSD simulator parameters. Defaults follow paper Table II scaled by
     `scale` so laptop-scale runs finish quickly (the paper itself scales the
@@ -375,6 +437,12 @@ class SimConfig:
     # Cap on the classified-range length (events) a thread caches ahead;
     # the range otherwise scales with the engine's adaptive chunk.
     cls_cache_window: int = 65536
+    # --- fault injection & recovery (core/faults.py) ---
+    # Default FaultConfig() is fully off; any nonzero knob attaches a
+    # FaultModel to Channels.read and routes the batched engine through
+    # the scalar span/quantum paths (fault-affected reads are a conflict
+    # class — see DESIGN.md). Knob-by-knob rationale lives on FaultConfig.
+    fault: FaultConfig = field(default_factory=FaultConfig)
 
     # ----- derived (scaled) quantities -----
     @property

@@ -124,6 +124,14 @@ class DeviceState:
         "ftl_total", "ftl_used", "flash",
         # promotion counters
         "acc",
+        # fault / recovery bookkeeping (core/faults.py; all zero and
+        # untouched when no FaultModel is attached)
+        "ft_retry_reads", "ft_retry_steps", "ft_uncorrectable",
+        "ft_outage_events", "ft_outage_ns",
+        "ft_die_failures", "ft_remapped_pages", "ft_bad_blocks",
+        "ft_power_losses", "ft_recovery_ns_total", "ft_recovery_ns_max",
+        "ft_replayed_pages", "ft_lost_dirty_pages", "ft_lost_inflight",
+        "ft_degraded", "ft_write_errors",
     )
 
     def __init__(self, cfg: SimConfig, page_space: int):
@@ -198,6 +206,24 @@ class DeviceState:
                 f"unknown SimConfig.ftl_backend: {cfg.ftl_backend!r}")
         # --- promotion counters ---
         self.acc = PromoCounts(page_space)
+        # --- fault / recovery counters (folded into Stats.finalize) ---
+        self.ft_retry_reads = 0       # reads that engaged the retry ladder
+        self.ft_retry_steps = 0       # total ladder steps across all reads
+        self.ft_uncorrectable = 0     # reads past the ladder (ECC poison)
+        self.ft_outage_events = 0
+        self.ft_outage_ns = 0.0
+        self.ft_die_failures = 0
+        self.ft_remapped_pages = 0    # valid pages migrated off dead dies
+        self.ft_bad_blocks = 0
+        self.ft_power_losses = 0
+        self.ft_recovery_ns_total = 0.0
+        self.ft_recovery_ns_max = 0.0
+        self.ft_replayed_pages = 0    # durable log lines replayed to flash
+        self.ft_lost_dirty_pages = 0  # volatile dirty cache pages dropped
+        self.ft_lost_inflight = 0     # dies with programs cut mid-flight
+        self.ft_degraded = 0          # 1 once spares exhaust: read-only
+        self.ft_write_errors = 0      # host-visible write failures while
+        #                               degraded (the RuntimeError is gone)
 
     # ---- epoch bumps (called by the ssd.py views and HostLru) ----
     def bump(self, page: int) -> None:

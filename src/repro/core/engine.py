@@ -279,6 +279,13 @@ class BatchedMachine(Machine):
             ds.flash.l2p_mv if ds.flash is not None else None,
             ds.flash.ppb if ds.flash is not None else 0,
             ds.gc_die_from, ds.gc_die_until,
+            # fault injection: the bound Channels.read when a FaultModel
+            # is attached, else None. Fault-affected flash reads are a
+            # conflict class — the span routes them through the shared
+            # method (retry ladder, outages, scheduled power loss / die
+            # failure) instead of its inlined timing mirror, so both
+            # engines consume the identical fault stream.
+            self.channels.read if self.channels.fault is not None else None,
         )
 
     def _columns(self, th: Thread):
@@ -602,7 +609,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
      promo_thr, lat_host, base, cache_idx, dram, lat_log, lat_cache,
      ctx_ns, ctx_thr, chan_bus, chan_die, n_ch, t_read, rd_busy,
      ftl_write, max_out, ctx_on, logbits, log_cap,
-     l2p, ppb, gc_from, gc_until) = m._span_env
+     l2p, ppb, gc_from, gc_until, f_read) = m._span_env
     block_route = l2p is not None
     lat_hist = st.lat_hist
     lb = _lat_bin
@@ -690,18 +697,21 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 else:
                     ch = (p * 1103515245 + 12345) % n_ch
                     dd = (p // n_ch) % DIES_PER_CHANNEL
-                die = chan_die[ch]
                 now2 = t + stall
-                dv = die[dd]
-                # background fetch: no GC-pause attribution (gc_attr=False
-                # in the serve() path this transcribes)
-                sensed = (dv if dv > now2 else now2) + t_read
-                bv = chan_bus[ch]
-                done = (sensed if sensed > bv else bv) + TRANSFER_NS
-                die[dd] = sensed
-                chan_bus[ch] = done
-                ds.chan_busy_ns += rd_busy
-                ds.flash_reads += 1
+                if f_read is not None:  # fault path: shared Channels.read
+                    done = f_read(ch, dd, now2, False)
+                else:
+                    die = chan_die[ch]
+                    dv = die[dd]
+                    # background fetch: no GC-pause attribution
+                    # (gc_attr=False in the serve() path this transcribes)
+                    sensed = (dv if dv > now2 else now2) + t_read
+                    bv = chan_bus[ch]
+                    done = (sensed if sensed > bv else bv) + TRANSFER_NS
+                    die[dd] = sensed
+                    chan_bus[ch] = done
+                    ds.chan_busy_ns += rd_busy
+                    ds.flash_reads += 1
                 wslots.append(done)
                 cclk = _insert_miss(ds, st, p, True, t, cclk, csets,
                                     cway, n_sets, ways, cres, cdirty,
@@ -752,25 +762,28 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 bw = bv - t
                 wait = dw if dw > bw else bw
                 est = (wait if wait > 0.0 else 0.0) + t_read
-            if dv > t:  # GC-pause attribution (Channels.read mirror)
-                gu = gc_until[ch][dd]
-                if gu > t:
-                    gf = gc_from[ch][dd]
-                    lo = t if t > gf else gf
-                    hi = dv if dv < gu else gu
-                    pause = hi - lo
-                    if pause > 0.0:
-                        ds.gc_stall_events += 1
-                        ds.gc_pause_ns_total += pause
-                        if pause > ds.gc_pause_max_ns:
-                            ds.gc_pause_max_ns = pause
-            # inlined Channels.read
-            sensed = (dv if dv > t else t) + t_read
-            done = (sensed if sensed > bv else bv) + TRANSFER_NS
-            die[dd] = sensed
-            chan_bus[ch] = done
-            ds.chan_busy_ns += rd_busy
-            ds.flash_reads += 1
+            if f_read is not None:  # fault path: shared Channels.read
+                done = f_read(ch, dd, t)
+            else:
+                if dv > t:  # GC-pause attribution (Channels.read mirror)
+                    gu = gc_until[ch][dd]
+                    if gu > t:
+                        gf = gc_from[ch][dd]
+                        lo = t if t > gf else gf
+                        hi = dv if dv < gu else gu
+                        pause = hi - lo
+                        if pause > 0.0:
+                            ds.gc_stall_events += 1
+                            ds.gc_pause_ns_total += pause
+                            if pause > ds.gc_pause_max_ns:
+                                ds.gc_pause_max_ns = pause
+                # inlined Channels.read
+                sensed = (dv if dv > t else t) + t_read
+                done = (sensed if sensed > bv else bv) + TRANSFER_NS
+                die[dd] = sensed
+                chan_bus[ch] = done
+                ds.chan_busy_ns += rd_busy
+                ds.flash_reads += 1
             # inlined DataCache.insert(p, False) + victim write-back:
             # verbatim body of _insert_miss (KEEP IN SYNC with it — this
             # is the one site hot enough to shed the call overhead)
@@ -985,25 +998,28 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             bw = bv - t
             wait = dw if dw > bw else bw
             est = (wait if wait > 0.0 else 0.0) + t_read
-        if dv > t:  # GC-pause attribution (Channels.read mirror)
-            gu = gc_until[ch][dd]
-            if gu > t:
-                gf = gc_from[ch][dd]
-                lo = t if t > gf else gf
-                hi = dv if dv < gu else gu
-                pause = hi - lo
-                if pause > 0.0:
-                    ds.gc_stall_events += 1
-                    ds.gc_pause_ns_total += pause
-                    if pause > ds.gc_pause_max_ns:
-                        ds.gc_pause_max_ns = pause
-        # inlined Channels.read
-        sensed = (dv if dv > t else t) + t_read
-        done = (sensed if sensed > bv else bv) + TRANSFER_NS
-        die[dd] = sensed
-        chan_bus[ch] = done
-        ds.chan_busy_ns += rd_busy
-        ds.flash_reads += 1
+        if f_read is not None:  # fault path: shared Channels.read
+            done = f_read(ch, dd, t)
+        else:
+            if dv > t:  # GC-pause attribution (Channels.read mirror)
+                gu = gc_until[ch][dd]
+                if gu > t:
+                    gf = gc_from[ch][dd]
+                    lo = t if t > gf else gf
+                    hi = dv if dv < gu else gu
+                    pause = hi - lo
+                    if pause > 0.0:
+                        ds.gc_stall_events += 1
+                        ds.gc_pause_ns_total += pause
+                        if pause > ds.gc_pause_max_ns:
+                            ds.gc_pause_max_ns = pause
+            # inlined Channels.read
+            sensed = (dv if dv > t else t) + t_read
+            done = (sensed if sensed > bv else bv) + TRANSFER_NS
+            die[dd] = sensed
+            chan_bus[ch] = done
+            ds.chan_busy_ns += rd_busy
+            ds.flash_reads += 1
         cclk = _insert_miss(ds, st, p, False, t, cclk, csets, cway, n_sets,
                             ways, cres, cdirty, cstamp, epoch_mv, journal,
                             ftl_write)
@@ -1442,7 +1458,15 @@ def run_fused(m: BatchedMachine, cfg: SimConfig, threads) -> list:
     unchanged. Inline-only configs (tpp/astriflash: per-event RNG order)
     and dram-only runs (pure vector path) use the plain scheduler around
     batched_quantum directly. Returns the per-core clock list."""
-    if m._inline_only or cfg.dram_only:
+    if m._inline_only or cfg.dram_only or m.channels.fault is not None:
+        # Fault injection is a conflict class: the mega-loop's three
+        # inlined flash-read sites would bypass the FaultModel (retry
+        # ladders, outages, scheduled power loss / die failure), and a
+        # power-loss restart mutates cache/timeline state out from under
+        # the fused loop's hoisted locals. The scheduler + batched_quantum
+        # route every flash read through the shared Channels.read (the
+        # span's miss sites dispatch to it via _span_env's f_read), so
+        # parity with the reference engine holds with faults on.
         return _run_scheduler(m, cfg, threads, batched_quantum)
     m._threads = threads
     st = m.stats
@@ -1473,7 +1497,7 @@ def run_fused(m: BatchedMachine, cfg: SimConfig, threads) -> list:
      promo_thr, lat_host, base, cache_idx, dram, lat_log, lat_cache,
      ctx_ns, ctx_thr, chan_bus, chan_die, n_ch, t_read, rd_busy,
      ftl_write, max_out, ctx_on, logbits, log_cap,
-     l2p, ppb, gc_from, gc_until) = m._span_env
+     l2p, ppb, gc_from, gc_until, f_read) = m._span_env
     block_route = l2p is not None
     log_on = logbits is not None
     lat_hist = st.lat_hist

@@ -1,0 +1,255 @@
+"""Deterministic device fault model + crash-consistent recovery.
+
+Every fault decision is a pure function of ``FaultConfig`` and the
+device's flash-read ordinal: per-read draws come from a splitmix64-style
+counter hash over ``(fault_seed, read ordinal, salt)``, and the scheduled
+events (power loss, die failure) trigger when the ordinal hits a value in
+their config tuple. Both replay engines issue flash reads in the identical
+order (that ordering is what the parity suites already pin down), so they
+consume the identical fault stream and stay bit-exact — there is no
+wall-clock, no global RNG, and no per-engine state.
+
+Wiring: ``Machine.__init__`` attaches a ``FaultModel`` to
+``Channels.fault`` when any knob is nonzero. ``Channels.read`` dispatches
+to :meth:`FaultModel.read`, which mirrors its timing verbatim and layers
+the fault machinery on top. The batched engine treats fault-affected
+cells as a conflict class: ``run_fused`` refuses to run with a fault
+model attached (falling back to the scheduler + ``batched_quantum``,
+whose boundary transcription already routes every flash read through
+``Channels.read``), and the scalar ``_inline_span`` calls the bound
+``Channels.read`` instead of its inlined timing mirror at its three
+miss sites. Zero-fault configs construct no FaultModel at all — the hot
+paths pay a single ``is not None`` test.
+
+Fault classes (see FaultConfig in configs/base.py for knob rationale):
+
+  * **ECC read-retry ladder** — with probability ``read_error_rate`` the
+    first sense fails; retry step ``k`` is still failing while
+    ``u < read_error_rate * retry_fail_ratio**k``. Each step adds
+    ``retry_step_ns`` (default: one full re-sense) to the die's busy
+    time. A read that walks off the ladder is **uncorrectable**: it
+    completes at max-ladder latency and is counted toward UBER — the
+    device returns poison, it does not hang.
+  * **Transient outages** — with probability ``outage_rate`` the target
+    die is unavailable for ``outage_ns`` before service starts.
+  * **Whole-die hard failure** — at a scheduled read ordinal the die that
+    read targeted fails permanently: ``BlockFtl.fail_die`` marks its
+    blocks bad, prunes the free pool, reopens any frontier that lived
+    there and migrates the valid pages out through the normal program
+    path. Requires the block FTL backend.
+  * **Power loss** — at a scheduled read ordinal the device restarts.
+    Volatile state dies: in-flight die operations are cut, the SSD-DRAM
+    page cache is dropped (dirty pages counted as lost). The cacheline
+    write log is DURABLE (the paper's §III-B persistence claim): every
+    logged page is replayed against the FTL as an ordinary out-of-place
+    program, which is idempotent — replaying twice only burns spare
+    space, the l2p stays consistent. The device serves again only after
+    the replay programs plus ``recovery_scan_ns`` complete; the
+    triggering read's latency IS the host-visible recovery tail.
+
+Degradation: spare-pool exhaustion (``BlockFtl._pop_free`` on an empty
+pool, e.g. after die failures ate the over-provisioning) no longer raises
+— the device enters a read-only degraded mode (``DeviceState.ft_degraded``)
+and every subsequent program is counted as a host-visible write error.
+"""
+from __future__ import annotations
+
+from repro.core.device_state import DIES_PER_CHANNEL, DeviceState
+from repro.core.ssd import TRANSFER_NS
+
+_MASK = (1 << 64) - 1
+_SALT_RETRY = 0x243F6A8885A308D3   # pi digits; any fixed odd constants do
+_SALT_OUTAGE = 0x13198A2E03707344
+
+
+def _u01(seed: int, idx: int, salt: int) -> float:
+    """Counter-based uniform draw in [0, 1): splitmix64 finalizer over a
+    linear combination of (seed, ordinal, salt). Pure int math — identical
+    on every platform and trivially identical across both engines."""
+    z = (seed * 0x9E3779B97F4A7C15 + idx * 0xBF58476D1CE4E5B9
+         + salt) & _MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+    z ^= z >> 31
+    return (z >> 11) * (1.0 / (1 << 53))
+
+
+class FaultModel:
+    """Per-device fault injector bound to ``Channels.fault``.
+
+    Holds only config-derived scalars and the two scheduled-event sets;
+    all mutable accounting lives on DeviceState (``ft_*``) so Stats folds
+    it like everything else and parity compares it like everything else.
+    """
+
+    __slots__ = ("cfg", "s", "channels", "ftl", "seed", "err_rate",
+                 "fail_ratio", "steps", "step_ns", "outage_rate",
+                 "outage_ns", "_pl_sched", "_df_sched")
+
+    def __init__(self, cfg, state: DeviceState, channels, ftl):
+        fc = cfg.fault
+        self.cfg = cfg
+        self.s = state
+        self.channels = channels
+        self.ftl = ftl
+        self.seed = int(fc.fault_seed)
+        self.err_rate = float(fc.read_error_rate)
+        self.fail_ratio = float(fc.retry_fail_ratio)
+        self.steps = max(int(fc.retry_steps), 1)
+        self.step_ns = float(fc.retry_step_ns) or float(cfg.flash.read_ns)
+        self.outage_rate = float(fc.outage_rate)
+        self.outage_ns = float(fc.outage_ns)
+        self._pl_sched = set(int(i) for i in fc.power_loss_at)
+        self._df_sched = set(int(i) for i in fc.die_fail_at)
+        if self._df_sched and not hasattr(ftl, "fail_die"):
+            raise ValueError(
+                "FaultConfig.die_fail_at requires the block FTL backend "
+                "(hard failures remap through the free pool; the legacy "
+                "counter has no notion of physical blocks)")
+
+    # ---- the Channels.read service path under faults ----
+
+    def read(self, ch: int, d: int, now: float, gc_attr: bool = True) -> float:
+        """Mirror of ``Channels.read`` (KEEP IN SYNC with ssd.py) with the
+        fault machinery layered in. Scheduled power loss fires BEFORE the
+        read's timing (the read then waits out the whole recovery); a
+        scheduled die failure fires AFTER it (the read that "detected" the
+        failure still returns its data)."""
+        s = self.s
+        idx = s.flash_reads  # ordinal of THIS read, pre-increment
+        if self._pl_sched and idx in self._pl_sched:
+            self._pl_sched.discard(idx)
+            self._power_loss(now)
+        chn = self.channels
+        die = s.chan_die[ch]
+        dv = die[d]
+        if gc_attr and dv > now:
+            gu = s.gc_die_until[ch][d]
+            if gu > now:
+                gf = s.gc_die_from[ch][d]
+                lo = now if now > gf else gf
+                hi = dv if dv < gu else gu
+                pause = hi - lo
+                if pause > 0.0:
+                    s.gc_stall_events += 1
+                    s.gc_pause_ns_total += pause
+                    if pause > s.gc_pause_max_ns:
+                        s.gc_pause_max_ns = pause
+        start = now if now > dv else dv
+        if self.outage_rate > 0.0 and \
+                _u01(self.seed, idx, _SALT_OUTAGE) < self.outage_rate:
+            start += self.outage_ns
+            s.ft_outage_events += 1
+            s.ft_outage_ns += self.outage_ns
+        sense = chn.read_ns
+        if self.err_rate > 0.0:
+            u = _u01(self.seed, idx, _SALT_RETRY)
+            if u < self.err_rate:
+                retries = 1
+                thr = self.err_rate * self.fail_ratio
+                while retries < self.steps and u < thr:
+                    retries += 1
+                    thr *= self.fail_ratio
+                s.ft_retry_reads += 1
+                s.ft_retry_steps += retries
+                if u < thr:  # the whole ladder failed: ECC poison
+                    s.ft_uncorrectable += 1
+                sense += retries * self.step_ns
+        sensed = start + sense
+        bus = s.chan_bus[ch]
+        xfer_start = sensed if sensed > bus else bus
+        done = xfer_start + TRANSFER_NS
+        die[d] = sensed
+        s.chan_bus[ch] = done
+        s.chan_busy_ns += TRANSFER_NS + chn.read_ns / DIES_PER_CHANNEL
+        s.flash_reads += 1
+        if self._df_sched and idx in self._df_sched:
+            self._df_sched.discard(idx)
+            self.ftl.fail_die(now, ch, d)
+        return done
+
+    # ---- power loss + crash-consistent restart ----
+
+    def _power_loss(self, now: float) -> None:
+        """Cut volatile state, replay the durable write log, and hold the
+        device offline until recovery completes.
+
+        Every timeline/array mutation here is IN PLACE: the batched
+        engine's spans hold direct references to the chan_bus/chan_die/
+        gc window lists and the cache arrays — rebinding any of them
+        would silently fork the state the other engine sees."""
+        s = self.s
+        cfg = self.cfg
+        n_ch = cfg.n_channels
+        s.ft_power_losses += 1
+        # 1) in-flight die operations (programs, reads mid-sense) are cut
+        lost = 0
+        for c in range(n_ch):
+            die = s.chan_die[c]
+            for d in range(DIES_PER_CHANNEL):
+                if die[d] > now:
+                    lost += 1
+                    die[d] = now
+            if s.chan_bus[c] > now:
+                s.chan_bus[c] = now
+            s.gc_die_from[c][:] = [0.0] * DIES_PER_CHANNEL
+            s.gc_die_until[c][:] = [0.0] * DIES_PER_CHANNEL
+        s.ft_lost_inflight += lost
+        # 2) the SSD-DRAM page cache is volatile: drop everything. Dirty
+        # pages whose lines were never logged are data loss (counted);
+        # with the write log on, dirtiness lives in the log and survives.
+        res = s.cache_res.nonzero()[0]
+        if res.size:
+            pages = res.tolist()
+            s.ft_lost_dirty_pages += int(s.cache_dirty[res].sum())
+            s.cache_res[res] = False
+            s.cache_dirty[res] = False
+            sets, way, n_sets = s.cache_sets, s.cache_way, s.cache_n_sets
+            for p in pages:
+                w = way[p]
+                if w >= 0:
+                    sets[p % n_sets][w] = -1
+                    way[p] = -1
+            s.bump_list(pages)
+        # 3) replay the DURABLE cacheline log (both buffers, insertion
+        # order, deduped): each page becomes one ordinary out-of-place
+        # program. Idempotent by construction — on_flash_write only
+        # remaps; the log dicts themselves are NOT cleared (the log is
+        # persistent media and compaction owns its lifecycle — this also
+        # keeps the engines' hoisted log references valid).
+        replayed = 0
+        if s.log_old or s.log_active:
+            seen = {}
+            if s.log_old:
+                for p in s.log_old:
+                    seen[p] = True
+            if s.log_active:
+                for p in s.log_active:
+                    seen[p] = True
+            wr = self.ftl.on_flash_write
+            for p in seen:
+                wr(now, p)
+                replayed += 1
+        s.ft_replayed_pages += replayed
+        # 4) recovery barrier: the device answers nothing until the replay
+        # programs drain plus the firmware restart scan. Every timeline is
+        # pushed to the barrier so the next read on ANY die pays the tail.
+        end = now
+        for c in range(n_ch):
+            if s.chan_bus[c] > end:
+                end = s.chan_bus[c]
+            for t in s.chan_die[c]:
+                if t > end:
+                    end = t
+        end += cfg.fault.recovery_scan_ns
+        for c in range(n_ch):
+            s.chan_bus[c] = end
+            s.chan_die[c][:] = [end] * DIES_PER_CHANNEL
+            # replay-driven GC carved windows inside the outage; the host
+            # never saw them — recovery time must not book as GC pause
+            s.gc_die_from[c][:] = [0.0] * DIES_PER_CHANNEL
+            s.gc_die_until[c][:] = [0.0] * DIES_PER_CHANNEL
+        dt = end - now
+        s.ft_recovery_ns_total += dt
+        if dt > s.ft_recovery_ns_max:
+            s.ft_recovery_ns_max = dt

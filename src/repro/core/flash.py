@@ -68,6 +68,7 @@ keeps the engines' cached classification machinery untouched by routing.
 from __future__ import annotations
 
 import heapq
+import os
 from typing import List, Tuple
 
 import numpy as np
@@ -140,7 +141,7 @@ class FlashState:
         self.blk_valid[:full_blocks] = ppb
         if full_blocks < lblocks:
             self.blk_valid[full_blocks] = page_space - full_blocks * ppb
-        self.blk_state = np.zeros(n_blocks, np.int8)  # 0 free/1 open/2 sealed
+        self.blk_state = np.zeros(n_blocks, np.int8)  # 0 free/1 open/2 sealed/3 bad
         self.blk_state[:lblocks] = 2
         self.blk_seal = np.zeros(n_blocks, np.int64)
         self.blk_seal[:lblocks] = np.arange(1, lblocks + 1)
@@ -228,6 +229,15 @@ class BlockFtl:
             heapq.heapify(self._vic_heap)
         else:
             self._vic_heap = None
+        # opt-in periodic in-run invariant checking: REPRO_CHECK_INVARIANTS=N
+        # runs check_invariants every N GC cycles (N=1: every cycle), so a
+        # long property sweep catches FTL corruption at the GC round that
+        # introduced it instead of in a post-mortem assert at run end.
+        try:
+            self._check_every = int(
+                os.environ.get("REPRO_CHECK_INVARIANTS", "0") or 0)
+        except ValueError:
+            self._check_every = 0
 
     # ---- physical service-path resolution ----
     def phys_loc(self, page: int) -> Tuple[int, int]:
@@ -243,6 +253,12 @@ class BlockFtl:
     def on_flash_write(self, now: float, page: int) -> None:
         fs = self.fs
         s = self.s
+        if s.ft_degraded:
+            # spares exhausted: the device is read-only. The program is a
+            # host-visible write error (counted), not an exception — reads
+            # keep serving from the existing mapping.
+            s.ft_write_errors += 1
+            return
         ppb = fs.ppb
         l2p = fs.l2p_mv
         p2l = fs.p2l_mv
@@ -304,8 +320,12 @@ class BlockFtl:
             if len(fs.free) <= fs.reserve:
                 self._collect(now)
             nb = self._pop_free()
-            fs.blk_state_mv[nb] = 1
-            fs.blk_gc_mv[nb] = False  # host-written data
+            if nb >= 0:
+                fs.blk_state_mv[nb] = 1
+                fs.blk_gc_mv[nb] = False  # host-written data
+            # nb == -1: no spare to reopen the frontier — the device just
+            # went degraded/read-only; the -1 frontier is never written
+            # again (the guard at the top rejects all further programs)
             if hot:
                 fs.hot_blk = nb
                 fs.hot_slot = 0
@@ -318,22 +338,23 @@ class BlockFtl:
             fs.host_slot = slot
 
     def _pop_free(self) -> int:
-        """Take a block from the free pool, with a diagnosable failure:
-        at degenerate geometries (spare pool ~ the open frontiers, every
-        sealed block fully valid) GC cannot free net space and the pool
-        can starve — surface the configuration problem instead of an
-        IndexError deep in the replay loop. With ``wear_leveling`` the
-        pick is the lowest-erase-count free block (block-id tie-break, so
-        the choice is independent of the pool's internal order) instead
-        of the LIFO pop that recycles recently-erased blocks."""
+        """Take a block from the free pool; returns -1 and flips the
+        device into degraded read-only mode when the pool is exhausted
+        (die failures ate the over-provisioning, or a degenerate geometry
+        where every sealed block is fully valid and GC cannot free net
+        space). This used to raise RuntimeError; a real device fails the
+        WRITE path, not the whole machine — callers treat -1 as "no
+        frontier" and on_flash_write starts counting host-visible write
+        errors (Stats.degraded_mode / degraded_writes). With
+        ``wear_leveling`` the pick is the lowest-erase-count free block
+        (block-id tie-break, so the choice is independent of the pool's
+        internal order) instead of the LIFO pop that recycles
+        recently-erased blocks."""
         fs = self.fs
         free = fs.free
         if not free:
-            raise RuntimeError(
-                "block FTL spare pool exhausted: GC cannot reclaim net "
-                f"space ({fs.n_blocks} blocks x {fs.ppb} pages, reserve "
-                f"{fs.reserve}) — raise SimConfig.op_ratio or "
-                "pages_per_block for this write pattern")
+            self.s.ft_degraded = 1
+            return -1
         if not self.wear_level:
             return free.pop()
         er = fs.blk_erase_mv
@@ -389,6 +410,8 @@ class BlockFtl:
     def _gc_once(self, now: float) -> bool:
         fs = self.fs
         s = self.s
+        if s.ft_degraded or fs.gc_blk < 0:
+            return False  # read-only: no frontier to migrate into
         b = self._pick_victim()
         if b < 0:
             return False
@@ -516,6 +539,22 @@ class BlockFtl:
                     if vh is not None:
                         heappush(vh, (fs.blk_valid_mv[b2], b2))
                     nb = self._pop_free()
+                    if nb < 0:
+                        # spares exhausted MID-migration (now degraded):
+                        # abort. The migrated prefix's source slots are
+                        # normally invalidated wholesale by the erase
+                        # below, which can no longer happen — fix them up
+                        # here so the mapping invariants hold, and leave
+                        # the victim sealed with its unmigrated tail.
+                        fs.gc_blk = -1
+                        fs.gc_slot = 0
+                        s.chan_busy_ns = busy
+                        fs.pvalid[inv_np[:x]] = False
+                        fs.blk_valid_mv[b] = fs.blk_valid_mv[b] - x
+                        if vh is not None:
+                            heappush(vh, (fs.blk_valid_mv[b], b))
+                        s.gc_migrated_pages += x
+                        return False
                     fs.blk_state_mv[nb] = 1
                     fs.blk_gc_mv[nb] = True  # GC-written data: never "hot"
                     fs.gc_blk = nb
@@ -531,10 +570,67 @@ class BlockFtl:
         fs.blk_state_mv[b] = 0
         fs.free.append(b)
         s.gc_events += 1
+        if self._check_every and s.gc_events % self._check_every == 0:
+            check_invariants(fs, degraded=bool(s.ft_degraded))
         return True
 
-def check_invariants(fs: FlashState) -> None:
-    """Assert the valid-count / bitmap / mapping invariants (test hook)."""
+    # ---- whole-die hard failure (core/faults.py schedules these) ----
+    def fail_die(self, now: float, ch: int, d: int) -> None:
+        """Permanently fail every block on physical die ``(ch, d)``:
+        prune them from the free pool, mark them bad (state 3 — never
+        erased, never victimized: the lazy heap and the cost-benefit scan
+        both only accept state 2), reopen any write frontier that lived
+        on the die, and remap the surviving valid pages out through the
+        ordinary program path, so heat classification, frontier seals and
+        GC pressure all behave exactly as for host writes. If the
+        remaining spares cannot absorb the remap the device goes degraded
+        mid-way: the unmigrated pages stay mapped to bad blocks (reads
+        still route there — the latency model doesn't care that the data
+        is fiction, and check_invariants permits it while degraded)."""
+        fs = self.fs
+        s = self.s
+        n_ch = self.n_channels
+        stride = n_ch * DIES_PER_CHANNEL
+        bad = [b for b in range(ch + n_ch * d, fs.n_blocks, stride)
+               if fs.blk_state_mv[b] != 3]
+        if not bad:
+            return  # this die already failed
+        s.ft_die_failures += 1
+        s.ft_bad_blocks += len(bad)
+        bad_set = set(bad)
+        fs.free[:] = [blk for blk in fs.free if blk not in bad_set]
+        for blk in bad:
+            fs.blk_state_mv[blk] = 3
+        for kind in ("host", "hot", "gc"):
+            blk = getattr(fs, kind + "_blk")
+            if blk >= 0 and blk in bad_set:
+                nb = self._pop_free()
+                if nb >= 0:
+                    fs.blk_state_mv[nb] = 1
+                    fs.blk_gc_mv[nb] = kind == "gc"
+                setattr(fs, kind + "_blk", nb)
+                setattr(fs, kind + "_slot", 0)
+        ppb = fs.ppb
+        p2l = fs.p2l_mv
+        pvalid = fs.pvalid_mv
+        for blk in bad:
+            base = blk * ppb
+            for pp in range(base, base + ppb):
+                if pvalid[pp] and not s.ft_degraded:
+                    lp = p2l[pp]
+                    if lp >= 0:
+                        # invalidates pp via the stale-copy path (bad
+                        # blocks are state 3, so no victim-heap push)
+                        self.on_flash_write(now, lp)
+                        s.ft_remapped_pages += 1
+
+
+def check_invariants(fs: FlashState, degraded: bool = False) -> None:
+    """Assert the valid-count / bitmap / mapping invariants. Test hook,
+    and — with REPRO_CHECK_INVARIANTS=N — a periodic in-run checker
+    (every N GC cycles). ``degraded`` relaxes what a read-only device
+    cannot uphold: frontiers may be -1 and bad blocks may still hold
+    valid pages whose remap was cut short."""
     ppb = fs.ppb
     per_block = fs.pvalid.reshape(fs.n_blocks, ppb).sum(axis=1)
     assert (per_block == fs.blk_valid).all(), "blk_valid != bitmap sums"
@@ -550,6 +646,14 @@ def check_invariants(fs: FlashState) -> None:
         assert (b in free_set) == (st == 0), "free pool vs blk_state drift"
         if st == 0:
             assert int(fs.blk_valid[b]) == 0, "free block holds valid pages"
+        if st == 3 and not degraded:
+            assert int(fs.blk_valid[b]) == 0, \
+                "bad block still holds valid pages on a healthy device"
+    if degraded:
+        for blk in (fs.host_blk, fs.gc_blk, fs.hot_blk):
+            assert blk < 0 or fs.blk_state[blk] == 1, \
+                "a surviving frontier must stay open"
+        return
     assert fs.blk_state[fs.host_blk] == 1 and fs.blk_state[fs.gc_blk] == 1
     assert fs.blk_gc[fs.gc_blk] and not fs.blk_gc[fs.host_blk]
     if fs.hot_blk >= 0:

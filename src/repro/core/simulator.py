@@ -105,6 +105,14 @@ class Stats:
         # variable-latency bookkeeping (lat_hist is engine-internal: the
         # percentiles above are its exported summary)
         "ssd_w_var", "lat_hist",
+        # fault / recovery (folded from DeviceState.ft_*; all zero unless
+        # a FaultConfig knob is on)
+        "retry_reads", "retry_steps", "uncorrectable_reads", "uber",
+        "outage_events", "outage_ns_total",
+        "die_failures", "remapped_pages", "bad_blocks",
+        "power_loss_events", "recovery_ns_total", "recovery_ns_max",
+        "replayed_pages", "lost_dirty_pages", "lost_inflight",
+        "degraded_mode", "degraded_writes",
     )
 
     def __init__(self):
@@ -132,6 +140,25 @@ class Stats:
         self.gc_stall_events = ds.gc_stall_events
         fw = ds.flash_writes
         self.waf = (fw + ds.gc_migrated_pages) / fw if fw else 1.0
+        # fault / recovery counters (core/faults.py; zero when faults off)
+        self.retry_reads = ds.ft_retry_reads
+        self.retry_steps = ds.ft_retry_steps
+        self.uncorrectable_reads = ds.ft_uncorrectable
+        fr = ds.flash_reads
+        self.uber = ds.ft_uncorrectable / fr if fr else 0.0
+        self.outage_events = ds.ft_outage_events
+        self.outage_ns_total = ds.ft_outage_ns
+        self.die_failures = ds.ft_die_failures
+        self.remapped_pages = ds.ft_remapped_pages
+        self.bad_blocks = ds.ft_bad_blocks
+        self.power_loss_events = ds.ft_power_losses
+        self.recovery_ns_total = ds.ft_recovery_ns_total
+        self.recovery_ns_max = ds.ft_recovery_ns_max
+        self.replayed_pages = ds.ft_replayed_pages
+        self.lost_dirty_pages = ds.ft_lost_dirty_pages
+        self.lost_inflight = ds.ft_lost_inflight
+        self.degraded_mode = ds.ft_degraded
+        self.degraded_writes = ds.ft_write_errors
         lat_log = cfg.cxl_protocol_ns + cfg.log_index_ns + cfg.ssd_dram_ns
         lat_cache = cfg.cxl_protocol_ns + cfg.cache_index_ns + cfg.ssd_dram_ns
         ssd_w_const = self.ssd_w - self.ssd_w_var
@@ -210,6 +237,16 @@ class Machine:
         else:
             self.ftl = Ftl(cfg, self.state, self.channels)
             self.loc_of = self.channels.logical_loc
+        # fault injection (core/faults.py): attach only when some knob is
+        # on, so the zero-fault hot path keeps its is-None fast test and
+        # identical cell cache keys modulo the (default) fault group
+        if cfg.fault.enabled:
+            from repro.core.faults import FaultModel
+
+            self.fault = FaultModel(cfg, self.state, self.channels, self.ftl)
+            self.channels.fault = self.fault
+        else:
+            self.fault = None
         self.cache = DataCache(cfg, self.state)
         self.log = WriteLog(cfg, self.state) if cfg.enable_write_log else None
         self.host = self.state.host

@@ -63,6 +63,10 @@ class Channels:
         self.n_channels = cfg.n_channels
         self.read_ns = cfg.flash.read_ns
         self.program_ns = cfg.flash.program_ns
+        # fault injector (core/faults.py); attached by Machine.__init__
+        # when any FaultConfig knob is nonzero, else stays None and read()
+        # pays one is-not-None test
+        self.fault = None
 
     def logical_loc(self, page: int) -> Tuple[int, int]:
         """Legacy page-interleaved striping: (channel, die) from the
@@ -89,6 +93,9 @@ class Channels:
         marks a device-internal read no thread blocks on (compaction
         coalescing-buffer fills, Base-CSSD write-allocate background
         fetches): it still occupies the die/bus but books no pause."""
+        f = self.fault
+        if f is not None:  # retry ladder / outages / scheduled events
+            return f.read(ch, d, now, gc_attr)
         s = self.s
         die = s.chan_die[ch]
         dv = die[d]

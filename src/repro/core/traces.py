@@ -351,8 +351,21 @@ def gen_traces(
             except OSError:
                 pass
             return loaded
-        except Exception:  # corrupt/partial artifact: regenerate
-            pass
+        except Exception as e:
+            # Corrupt/truncated artifact (killed grid worker mid-rename on
+            # a non-atomic filesystem, disk-full tail, manual tampering):
+            # EVICT it, not just skip it — a bad entry left in place would
+            # be re-parsed (and re-fail) on every later run, and it still
+            # occupies LRU budget. Regeneration below overwrites anyway,
+            # but unlinking first also covers read-only-artifact setups
+            # where the store is best-effort.
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            _LOG.warning(
+                "trace cache: evicted corrupt artifact %s (%s: %s); "
+                "regenerating", path.name, type(e).__name__, e)
     traces = [
         gen_thread_trace(spec, n_req, seed * 1000 + t, scale) for t in range(n_threads)
     ]

@@ -1,0 +1,276 @@
+"""Device fault model + crash-consistent recovery (core/faults.py).
+
+Three contracts under test:
+
+* **Engine parity with faults on.** Fault-affected cells are a conflict
+  class — the batched engine falls back to the scheduler path and the
+  scalar span calls the shared ``Channels.read`` — so both engines must
+  consume the identical counter-hashed fault stream and stay bit-exact,
+  including every ``ft_*`` counter, with retries, outages, power losses
+  and die failures all firing.
+* **Crash consistency.** Power loss drops the volatile page cache and
+  in-flight programs, but every cacheline-log page survives: the replay
+  is idempotent (a second crash replays the same set and leaves the
+  l2p/p2l mapping consistent), the log dicts themselves are untouched,
+  and the FTL invariants hold after recovery.
+* **Graceful degradation.** Spare-pool exhaustion (cascading die
+  failures) must flip the device into read-only degraded mode and count
+  host-visible write errors — never raise.
+"""
+import dataclasses
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import FaultConfig, SimConfig, VARIANTS
+from repro.core.device_state import DeviceState
+from repro.core.faults import _SALT_OUTAGE, _SALT_RETRY, _u01
+from repro.core.flash import BlockFtl, check_invariants
+from repro.core.simulator import Machine, simulate
+from repro.core.ssd import Channels
+from repro.core.traces import WORKLOADS, gen_thread_trace
+
+# Same collision-forcing overrides as the fused-engine suite: a one-way
+# cache + tiny DRAM tier keeps flash-read traffic high enough that every
+# scheduled fault ordinal is actually reached within a few thousand
+# requests.
+CONFLICT_OVER = dict(
+    cache_ways=1, ssd_dram_bytes=32 << 20, flash_bytes=2 << 30,
+    write_log_bytes=1 << 20, host_dram_bytes=64 << 20,
+)
+
+# every fault class armed at once
+ALL_FAULTS = FaultConfig(read_error_rate=3e-3, outage_rate=1e-3,
+                         power_loss_at=(500,), die_fail_at=(900,))
+
+
+def _run(engine, workload, variant, n, seed=0, fault=ALL_FAULTS,
+         **overrides):
+    cfg = dataclasses.replace(SimConfig(), engine=engine, fault=fault,
+                              **overrides)
+    return simulate(workload, variant, cfg, total_req=n, seed=seed)
+
+
+def _assert_bit_exact(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        assert a[k] == b[k], (k, a[k], b[k])
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault stream
+# ---------------------------------------------------------------------------
+
+def test_u01_deterministic_bounded_and_salted():
+    for idx in (0, 1, 17, 10**9):
+        for salt in (_SALT_RETRY, _SALT_OUTAGE):
+            u = _u01(42, idx, salt)
+            assert 0.0 <= u < 1.0
+            assert u == _u01(42, idx, salt)  # pure function of the args
+    # the two salts must decorrelate the streams (same seed/ordinal)
+    assert _u01(0, 7, _SALT_RETRY) != _u01(0, 7, _SALT_OUTAGE)
+    # and the seed must matter
+    assert _u01(0, 7, _SALT_RETRY) != _u01(1, 7, _SALT_RETRY)
+
+
+# ---------------------------------------------------------------------------
+# engine parity with every fault class firing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_parity_under_faults_all_variants(variant):
+    a = _run("reference", "tpcc", variant, n=8_000, **CONFLICT_OVER)
+    b = _run("batched", "tpcc", variant, n=8_000, **CONFLICT_OVER)
+    _assert_bit_exact(a, b)
+
+
+def test_fault_stream_actually_engages():
+    """The parity sweep above proves nothing if no fault ever fires."""
+    out = _run("batched", "tpcc", "skybyte-full", n=8_000, **CONFLICT_OVER)
+    assert out["retry_reads"] > 0
+    assert out["power_loss_events"] == 1
+    assert out["die_failures"] == 1
+    assert out["recovery_ns_max"] >= ALL_FAULTS.recovery_scan_ns
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    wl=st.sampled_from(["tpcc", "srad", "bfs-dense"]),
+    variant=st.sampled_from(["base-cssd", "skybyte-c", "skybyte-full"]),
+    seed=st.integers(0, 2),
+    crash=st.sampled_from([200, 800]),
+)
+def test_power_loss_parity_and_recovery_tail(wl, variant, seed, crash):
+    """Property sweep: a mid-run power loss at any read ordinal leaves
+    the engines bit-identical, and the recovery barrier (replay drain +
+    firmware scan) shows up in the stats."""
+    fc = FaultConfig(power_loss_at=(crash,))
+    a = _run("reference", wl, variant, 6_000, seed=seed, fault=fc,
+             **CONFLICT_OVER)
+    b = _run("batched", wl, variant, 6_000, seed=seed, fault=fc,
+             **CONFLICT_OVER)
+    _assert_bit_exact(a, b)
+    assert a["power_loss_events"] == 1
+    assert a["recovery_ns_max"] >= fc.recovery_scan_ns
+
+
+# ---------------------------------------------------------------------------
+# read-retry ladder: latency ordering
+# ---------------------------------------------------------------------------
+
+def test_retry_ladder_latency_ordering():
+    """A higher first-sense error rate engages a superset of read
+    ordinals (u < rate) and walks each engaged read at least as far down
+    the ladder, so retry traffic and the read tail are monotone in the
+    rate — and a zero rate must match the no-fault-model baseline
+    exactly except for the fault counters themselves."""
+    outs = []
+    for rate in (0.0, 1e-3, 1e-2, 5e-2):
+        fc = FaultConfig(read_error_rate=rate, power_loss_at=(10**9,))
+        outs.append(_run("batched", "bfs-dense", "base-cssd", 8_000,
+                         fault=fc, **CONFLICT_OVER))
+    for lo, hi in zip(outs, outs[1:]):
+        assert hi["retry_reads"] >= lo["retry_reads"]
+        assert hi["retry_steps"] >= hi["retry_reads"]
+        assert hi["lat_p99_ns"] >= lo["lat_p99_ns"]
+        assert hi["lat_sum"] >= lo["lat_sum"]
+    assert outs[-1]["retry_reads"] > 0, "top rate must engage the ladder"
+    baseline = _run("batched", "bfs-dense", "base-cssd", 8_000,
+                    fault=FaultConfig(), **CONFLICT_OVER)
+    zero = outs[0]
+    for k in baseline:
+        assert zero[k] == baseline[k], (k, zero[k], baseline[k])
+
+
+# ---------------------------------------------------------------------------
+# crash consistency: durable log replay
+# ---------------------------------------------------------------------------
+
+def _served_machine(wl="srad", variant="skybyte-full", n=4_000, seed=0):
+    """A Machine driven through n requests with the fault model attached
+    but no fault scheduled to fire on its own."""
+    cfg = dataclasses.replace(SimConfig().variant(variant),
+                              fault=FaultConfig(power_loss_at=(10**9,)))
+    tr = gen_thread_trace(WORKLOADS[wl], n, seed, scale=128)
+    m = Machine(cfg, seed=seed, page_space=int(tr["n_pages"]))
+    wslots = []
+    now = 0.0
+    for p, l, w in zip(tr["page"].tolist(), tr["line"].tolist(),
+                       tr["write"].tolist()):
+        now += 50.0
+        lat, blocked, _ = m.serve(int(p), int(l), bool(w), now, wslots)
+        now += lat if blocked is None else 0.0
+    return m, now
+
+
+@settings(max_examples=4, deadline=None)
+@given(wl=st.sampled_from(["srad", "tpcc"]), seed=st.integers(0, 2))
+def test_power_loss_replay_idempotent_and_log_durable(wl, seed):
+    """Crash the device twice in a row. The durable log dicts must be
+    byte-identical across both recoveries (the log is persistent media —
+    replay never consumes it), the second replay must re-program exactly
+    the same page set, every logged page must stay mapped, and the FTL
+    invariants must hold after each recovery."""
+    m, now = _served_machine(wl=wl, seed=seed)
+    s = m.state
+    fs = s.flash
+    assert s.log_active or s.log_old, "corner needs a non-empty log"
+    log_before = (dict(s.log_old), dict(s.log_active))
+    logged = set(s.log_old) | set(s.log_active)
+
+    m.fault._power_loss(now)
+    r1 = s.ft_replayed_pages
+    assert r1 == len(logged)
+    assert (dict(s.log_old), dict(s.log_active)) == log_before
+    check_invariants(fs)
+    # volatile cache fully dropped
+    assert not s.cache_res.any()
+    for p in logged:
+        pp = int(fs.l2p[p])
+        assert pp >= 0 and bool(fs.pvalid[pp]) and int(fs.p2l[pp]) == p
+
+    m.fault._power_loss(now + 1.0)  # immediate second crash
+    assert s.ft_replayed_pages == 2 * r1, "replay must be idempotent"
+    assert (dict(s.log_old), dict(s.log_active)) == log_before
+    assert s.ft_power_losses == 2
+    check_invariants(fs)
+    for p in logged:
+        pp = int(fs.l2p[p])
+        assert pp >= 0 and bool(fs.pvalid[pp]) and int(fs.p2l[pp]) == p
+
+
+def test_power_loss_without_log_loses_dirty_cache():
+    """The baseline CSSD has no cacheline log: a crash must drop dirty
+    cache lines as counted data loss and replay nothing — the cost the
+    SkyByte write log exists to avoid."""
+    m, now = _served_machine(wl="srad", variant="base-cssd")
+    s = m.state
+    assert s.cache_dirty.any(), "corner needs dirty cache lines at crash"
+    m.fault._power_loss(now)
+    assert s.ft_lost_dirty_pages > 0
+    assert s.ft_replayed_pages == 0
+    assert not s.cache_res.any()
+    check_invariants(s.flash)
+
+
+# ---------------------------------------------------------------------------
+# die failure + graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_die_failure_remaps_and_keeps_parity():
+    fc = FaultConfig(die_fail_at=(300,))
+    a = _run("reference", "tpcc", "base-cssd", 8_000, fault=fc,
+             **CONFLICT_OVER)
+    b = _run("batched", "tpcc", "base-cssd", 8_000, fault=fc,
+             **CONFLICT_OVER)
+    _assert_bit_exact(a, b)
+    assert a["die_failures"] == 1
+    assert a["bad_blocks"] >= 1
+    assert a["degraded_mode"] == 0  # one die must not exhaust the spares
+
+
+def test_die_fail_requires_block_backend():
+    cfg = dataclasses.replace(SimConfig(), ftl_backend="legacy",
+                              fault=FaultConfig(die_fail_at=(1,)))
+    with pytest.raises(ValueError, match="block FTL backend"):
+        simulate("tpcc", "base-cssd", cfg, total_req=100)
+
+
+def test_spare_exhaustion_degrades_readonly_not_raises():
+    """Unit-level: mark the whole free pool bad (what cascading die
+    failures do) and ask for a fresh block. The empty pool must flip the
+    device into degraded mode — the old behaviour was an uncaught
+    RuntimeError from the middle of the service path — and every program
+    after that must be swallowed as a counted write error, never raise.
+    (GC reclamation keeping up with rewrites is the healthy path and is
+    covered by the end-to-end cascade test below.)"""
+    cfg = dataclasses.replace(SimConfig(), pages_per_block=4, op_ratio=0.0)
+    ds = DeviceState(cfg, 8)
+    ftl = BlockFtl(cfg, ds, Channels(cfg, ds))
+    fs = ds.flash
+    for b in fs.free:  # the pool dies, state stays consistent (bad)
+        fs.blk_state_mv[b] = 3
+    fs.free.clear()
+    assert ftl._pop_free() == -1, "empty pool must yield the sentinel"
+    assert ds.ft_degraded == 1
+    now = 0.0
+    for step in range(64):  # must never raise
+        now += 100.0
+        ftl.on_flash_write(now, step % 8)
+    assert ds.ft_write_errors == 64
+    check_invariants(fs, degraded=True)
+
+
+def test_cascading_die_failures_degrade_end_to_end():
+    """Full-stack: starvation-level over-provisioning plus a drumbeat of
+    die failures must exhaust the spare pool mid-run; the device finishes
+    the workload degraded (write errors counted in Stats) instead of
+    blowing up, and both engines agree bit-exactly on the whole ordeal."""
+    fc = FaultConfig(die_fail_at=tuple(range(100, 4100, 100)))
+    over = dict(CONFLICT_OVER, op_ratio=0.015)
+    a = _run("reference", "tpcc", "base-cssd", 20_000, fault=fc, **over)
+    b = _run("batched", "tpcc", "base-cssd", 20_000, fault=fc, **over)
+    _assert_bit_exact(a, b)
+    assert a["degraded_mode"] == 1
+    assert a["degraded_writes"] > 0
+    assert a["die_failures"] > 1

@@ -149,3 +149,35 @@ def test_trace_cache_eviction_silent_when_under_cap(tmp_path, monkeypatch,
         assert tr._evict_lru(keep=p) == 0
     assert p.exists()
     assert not caplog.records
+
+
+def test_trace_cache_corrupt_artifact_evicted_and_regenerated(
+        tmp_path, monkeypatch, caplog):
+    """A truncated npz (grid worker killed mid-write on a non-atomic
+    filesystem) must be detected on load, unlinked with a one-line
+    warning, and transparently regenerated — bit-identical, since trace
+    generation is seeded. It must not be re-parsed-and-re-failed on
+    every later run."""
+    import logging
+
+    from repro.core import traces as tr
+
+    monkeypatch.setattr(tr, "_TRACE_DIR", tmp_path)
+    monkeypatch.setenv("REPRO_TRACE_CACHE", "1")
+    tr.gen_traces.cache_clear()
+    good = tr.gen_traces("tpcc", 2, 500, seed=0, scale=64)
+    path = tmp_path / f"tpcc_2t_500r_0s_64x_{tr._source_fingerprint()}.npz"
+    assert path.exists()
+    raw = path.read_bytes()
+    path.write_bytes(raw[: len(raw) // 2])  # mid-write truncation
+    tr.gen_traces.cache_clear()  # force the disk path, not the lru hit
+    with caplog.at_level(logging.WARNING, logger="repro.core.traces"):
+        regen = tr.gen_traces("tpcc", 2, 500, seed=0, scale=64)
+    assert any("corrupt artifact" in r.message for r in caplog.records)
+    assert path.exists(), "regeneration must re-store the artifact"
+    reloaded = tr._load_traces(path, 2)  # and the new file must parse
+    for a, b, c in zip(good, regen, reloaded):
+        assert a["n_pages"] == b["n_pages"] == c["n_pages"]
+        assert (a["page"] == b["page"]).all()
+        assert (b["page"] == c["page"]).all()
+    tr.gen_traces.cache_clear()
