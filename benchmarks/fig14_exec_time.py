@@ -31,6 +31,9 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                 "gc_pause_frac": round(
                     r["gc_pause_ns_total"] / max(r["exec_ns"], 1), 4),
                 "gc_stalls": r["gc_stall_events"],
+                "gc_suspends": r["gc_suspends"],
+                "gc_pause_avoided_ms": round(
+                    r["gc_pause_avoided_ns"] / 1e6, 3),
             })
     full = [r["speedup"] for r in rows if r["variant"] == "skybyte-full"]
     dram = [r["speedup"] for r in rows if r["variant"] == "dram-only"]
@@ -56,7 +59,8 @@ def main(total_req: int = TOTAL_REQ, force: bool = False):
     print_csv("fig14_exec_time (paper: Full=6.11x geomean, 75% of DRAM-Only)",
               rows, ["workload", "variant", "exec_ms", "norm_exec", "speedup",
                      "ssd_bw_util", "ctx_switches", "gc_pause_ms",
-                     "gc_pause_frac", "gc_stalls"])
+                     "gc_pause_frac", "gc_stalls", "gc_suspends",
+                     "gc_pause_avoided_ms"])
     return rows
 
 

@@ -19,6 +19,17 @@ directly. Two sweeps:
     picks flatten the spread LIFO recycling concentrates; hot/cold
     frontier separation lowers migration volume by letting hot pages die
     together.
+  * ``qos`` rows — the die-level QoS grid (``gc_suspend`` x
+    ``read_priority`` x ``superblock``, core/qos.py) at the GC-live
+    over-provisioning point, reporting READ-only percentiles
+    (lat_read_p*: the mixed tail hides the read win behind the posted
+    writes that absorb read-priority's backpressure), suspend/resume
+    counts, avoided-pause volume, bypass counts and the max per-die
+    queue wait a host read observed. Superblock striping is the
+    blast-radius axis: per-die blocks confine GC to 1/1024 dies (stalls
+    rare but huge), striped blocks spread each GC across every die
+    (stalls dense but shallow) — suspend/resume + read priority then
+    clip them.
 """
 from __future__ import annotations
 
@@ -38,6 +49,17 @@ GC_POLICIES = ("greedy", "cost-benefit")
 # wear sweep: default OP (GC live), greedy victims, the placement grid
 WEAR_VARIANTS = ("base-cssd", "skybyte-full")
 WEAR_GRID = ((False, False), (True, False), (False, True), (True, True))
+# qos sweep: GC-live OP, (gc_suspend, read_priority, superblock) cells.
+# base-cssd gets the full ablation (each mechanism alone, both, and the
+# superblock axis off/on); skybyte-full just off / all-on — its write
+# log + coordinated switching already blunt the write-path tail, the
+# read-side QoS story is the base-CSSD one
+QOS_OP = 0.03
+QOS_GRID = ((False, False, False), (True, False, False),
+            (False, True, False), (True, True, False),
+            (False, False, True), (True, True, True))
+QOS_GRID_SKY = ((False, False, False), (True, True, False),
+                (True, True, True))
 
 
 def _row(wl, v, r, **extra):
@@ -46,6 +68,7 @@ def _row(wl, v, r, **extra):
         "workload": wl, "variant": v,
         "op_ratio": "", "gc_policy": "",
         "wear_leveling": "", "hotcold": "",
+        "gc_suspend": "", "read_priority": "", "superblock": "",
         "waf": round(r["waf"], 3),
         "gc_events": r["gc_events"],
         "gc_migrated_pages": r["gc_migrated_pages"],
@@ -83,6 +106,30 @@ def run(total_req: int = TOTAL_REQ, force: bool = False):
                 rows.append(_row(wl, v, r, op_ratio=cfg.op_ratio,
                                 gc_policy=cfg.gc_policy,
                                 wear_leveling=int(wear), hotcold=int(hc)))
+    for wl in WLS:  # --- die-level QoS grid ---
+        for v, grid in (("base-cssd", QOS_GRID),
+                        ("skybyte-full", QOS_GRID_SKY)):
+            for susp, rp, sb in grid:
+                cfg = dataclasses.replace(
+                    SimConfig(), op_ratio=QOS_OP, gc_suspend=susp,
+                    read_priority=rp, superblock=sb)
+                r = cached_sim(wl, v, cfg=cfg, total_req=total_req,
+                               force=force)
+                rows.append(_row(
+                    wl, v, r, op_ratio=QOS_OP,
+                    gc_suspend=int(susp), read_priority=int(rp),
+                    superblock=int(sb),
+                    lat_read_p50_ns=round(r["lat_read_p50_ns"], 1),
+                    lat_read_p95_ns=round(r["lat_read_p95_ns"], 1),
+                    lat_read_p99_ns=round(r["lat_read_p99_ns"], 1),
+                    gc_suspends=r["gc_suspends"],
+                    gc_resumes=r["gc_resumes"],
+                    gc_resume_ms=round(r["gc_resume_ns_total"] / 1e6, 3),
+                    gc_pause_avoided_ms=round(
+                        r["gc_pause_avoided_ns"] / 1e6, 3),
+                    rp_bypasses=r["rp_bypasses"],
+                    die_wait_max_us=round(
+                        r["qos_die_wait_max_ns"] / 1e3, 1)))
     return rows
 
 
@@ -94,12 +141,18 @@ def cells(total_req: int = TOTAL_REQ):
 def main(total_req: int = TOTAL_REQ, force: bool = False):
     rows = run(total_req, force)
     print_csv("fig_gc_tail (block FTL: over-provisioning x GC policy + "
-              "wear_leveling x hotcold, WAF + wear spread + latency tail)",
+              "wear_leveling x hotcold + die-level QoS grid, WAF + wear "
+              "spread + latency tail)",
               rows, ["workload", "variant", "op_ratio", "gc_policy",
-                     "wear_leveling", "hotcold", "waf", "gc_events",
+                     "wear_leveling", "hotcold", "gc_suspend",
+                     "read_priority", "superblock", "waf", "gc_events",
                      "gc_migrated_pages", "flash_write_MB",
                      "wear_max_erases", "wear_spread", "gc_pause_ms",
-                     "lat_p50_ns", "lat_p95_ns", "lat_p99_ns"])
+                     "lat_p50_ns", "lat_p95_ns", "lat_p99_ns",
+                     "lat_read_p50_ns", "lat_read_p95_ns",
+                     "lat_read_p99_ns", "gc_suspends", "gc_resumes",
+                     "gc_resume_ms", "gc_pause_avoided_ms",
+                     "rp_bypasses", "die_wait_max_us"])
     return rows
 
 

@@ -13,6 +13,7 @@
 #   bash scripts/ci.sh addr       # physical-routing parity (engines x FTLs)
 #   bash scripts/ci.sh fused      # fused-boundary-engine conflict parity
 #   bash scripts/ci.sh faults     # fault model + crash-recovery suite
+#   bash scripts/ci.sh qos        # die-level QoS: suspend/priority/striping
 #   bash scripts/ci.sh bench      # orchestrator smoke + baseline diff
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -90,6 +91,14 @@ if [[ "$STAGE" == "all" || "$STAGE" == "faults" ]]; then
   # firing with both engines bit-exact, replay idempotence after double
   # crashes, and spare-exhaustion degrading read-only instead of raising.
   python -m pytest -x -q tests/test_faults.py
+fi
+
+if [[ "$STAGE" == "all" || "$STAGE" == "qos" ]]; then
+  echo "== die-level QoS: GC suspend/resume + read priority + superblock =="
+  # The QoS knob grid bit-exact across both engines, suspend budgets
+  # bounded per carved window, read-p99 monotone under read priority,
+  # and striped-frontier placement agreeing with the blk_loc contract.
+  python -m pytest -x -q tests/test_qos.py -k "qos or suspend or superblock"
 fi
 
 if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then

@@ -443,6 +443,92 @@ class SimConfig:
     # the scalar span/quantum paths (fault-affected reads are a conflict
     # class — see DESIGN.md). Knob-by-knob rationale lives on FaultConfig.
     fault: FaultConfig = field(default_factory=FaultConfig)
+    # --- die-level QoS (core/qos.py; DESIGN.md "Die-level QoS") ---
+    # GC suspend/resume: a host read that lands inside a carved
+    # [gc_die_from, gc_die_until] window preempts the GC chain instead of
+    # waiting it out — the read pays gc_suspend_ns (bounded, ~erase-slice
+    # granularity) rather than the window's full residual, and the
+    # suspended GC work resumes behind the read with a fixed
+    # gc_resume_ns re-setup penalty. Off by default: QoS-active reads
+    # are a conflict class (both engines route through one QosModel.read,
+    # like faults), so the fused fast path is reserved for zero-QoS cells.
+    gc_suspend: bool = False
+    # Preemption latency: how long the in-flight erase/program slice takes
+    # to reach a suspendable point. 5us ~ one NAND suspend command on
+    # datasheet-class parts (tens of us worst case); it is the floor a
+    # suspended-GC read still pays, so it bounds the QoS'd read tail.
+    gc_suspend_ns: float = 5_000.0
+    # Resume re-setup cost charged to the DIE (not the read) per suspend:
+    # re-ramping the erase voltage / re-issuing the program costs real
+    # time, which is exactly why suspends must be bounded — each one
+    # stretches the GC window by read_ns + gc_resume_ns.
+    gc_resume_ns: float = 20_000.0
+    # Suspends allowed per carved GC window (refilled when a die starts a
+    # new window). Caps worst-case GC stretch at
+    # gc_suspend_max * (read_ns + gc_resume_ns) so a read storm cannot
+    # starve cleaning and collapse the free pool. 0 = never suspend even
+    # with gc_suspend=True (useful for the bounded-count tests).
+    gc_suspend_max: int = 4
+    # Read-priority die arbitration: outside GC windows, a read that would
+    # queue behind more than read_priority_wait_ns of die backlog (host
+    # and GC programs) is scheduled ahead of the queued work instead —
+    # the in-flight op cannot be preempted, so the read still waits up to
+    # the cap, and the displaced programs are pushed back by the read's
+    # die occupancy. Complements gc_suspend: suspend shrinks GC convoys,
+    # read priority shrinks program convoys.
+    read_priority: bool = False
+    # Backlog threshold above which a read bypasses the die queue. One
+    # program time (100us) by default: an arbiter can reorder the QUEUE
+    # but not the die, so one in-flight program is the irreducible wait.
+    # (read_priority also arms the channel-bus queue-jump — QosModel._xfer
+    # — which needs no knob: its cap is structurally one in-flight 800ns
+    # transfer, and bus convoys behind write bursts are frequently the
+    # dominant read wait.)
+    read_priority_wait_ns: float = 100_000.0
+    # Superblock striped-frontier placement: stripe each logical block's
+    # pages page-by-page across channels then dies (page p of block b
+    # lives on channel (b*ppb+p) % n_channels) instead of placing whole
+    # blocks on one die. Sequential reads fan across all channels, but a
+    # GC victim's blast radius grows from ONE die to every die the stripe
+    # touches — fig_gc_tail's qos sweep quantifies that trade. Placement
+    # only: mappings change, arbitration does not, so superblock alone
+    # keeps the fused engine.
+    superblock: bool = False
+
+    def __post_init__(self) -> None:
+        # Reject incoherent QoS knob combos loudly (PR 4 style): every
+        # message names the knob so a sweep script can diagnose itself.
+        if self.superblock and self.ftl_backend != "block":
+            raise ValueError(
+                "superblock=True stripes the block FTL's frontier and "
+                f"requires ftl_backend='block' (got {self.ftl_backend!r}); "
+                "the legacy backend has no physical blocks to stripe"
+            )
+        if self.gc_suspend_max < 0:
+            raise ValueError(
+                f"gc_suspend_max must be >= 0 (got {self.gc_suspend_max}); "
+                "use 0 to disable suspension, not a negative sentinel"
+            )
+        if self.gc_suspend_ns < 0.0 or self.gc_resume_ns < 0.0:
+            raise ValueError(
+                "gc_suspend_ns and gc_resume_ns are latencies and must be "
+                f">= 0 (got {self.gc_suspend_ns}, {self.gc_resume_ns})"
+            )
+        if self.read_priority_wait_ns <= 0.0:
+            raise ValueError(
+                "read_priority_wait_ns must be > 0 (got "
+                f"{self.read_priority_wait_ns}); the in-flight die op "
+                "cannot be preempted, so a zero wait cap is unsatisfiable"
+            )
+        if self.fault.enabled and (
+            self.gc_suspend or self.read_priority or self.superblock
+        ):
+            raise ValueError(
+                "fault injection cannot be combined with QoS knobs "
+                "(gc_suspend/read_priority/superblock): FaultModel.read "
+                "and die-failure remap assume per-die blocks and the "
+                "un-arbitrated timing recipe"
+            )
 
     # ----- derived (scaled) quantities -----
     @property
@@ -482,6 +568,15 @@ class SimConfig:
     @property
     def lines_per_page(self) -> int:
         return self.page_bytes // self.cacheline_bytes
+
+    @property
+    def qos_enabled(self) -> bool:
+        """True when a QosModel must arbitrate reads (conflict class).
+
+        superblock alone is deliberately NOT included: it changes
+        placement, not arbitration, so striped zero-QoS cells keep the
+        fused engine."""
+        return self.gc_suspend or self.read_priority
 
     def variant(self, name: str) -> "SimConfig":
         """Paper §VI-A design points by name."""

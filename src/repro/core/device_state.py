@@ -132,6 +132,14 @@ class DeviceState:
         "ft_power_losses", "ft_recovery_ns_total", "ft_recovery_ns_max",
         "ft_replayed_pages", "ft_lost_dirty_pages", "ft_lost_inflight",
         "ft_degraded", "ft_write_errors",
+        # die-level QoS (core/qos.py). gc_windows / gc_susp_left are
+        # maintained unconditionally by the FTL's window carves (cheap:
+        # one int write per NEW window, not per read); the remaining
+        # counters are only touched by an attached QosModel.
+        "gc_windows", "gc_susp_left",
+        "gc_suspends", "gc_resumes", "gc_resume_ns_total",
+        "gc_pause_avoided_ns",
+        "rp_bypasses", "rp_wait_saved_ns", "qos_die_wait_max_ns",
     )
 
     def __init__(self, cfg: SimConfig, page_space: int):
@@ -224,6 +232,22 @@ class DeviceState:
         self.ft_degraded = 0          # 1 once spares exhaust: read-only
         self.ft_write_errors = 0      # host-visible write failures while
         #                               degraded (the RuntimeError is gone)
+        # --- die-level QoS bookkeeping (folded into Stats.finalize) ---
+        self.gc_windows = 0           # distinct GC windows carved (all runs)
+        # Per-die residual suspend budget for the CURRENT window; refilled
+        # to cfg.gc_suspend_max whenever a die carves a new window, so the
+        # testable bound is gc_suspends <= gc_suspend_max * gc_windows.
+        self.gc_susp_left = [[0] * DIES_PER_CHANNEL
+                             for _ in range(cfg.n_channels)]
+        self.gc_suspends = 0
+        self.gc_resumes = 0           # == suspends today (every suspend
+        #                               schedules exactly one resume)
+        self.gc_resume_ns_total = 0.0
+        self.gc_pause_avoided_ns = 0.0  # pause the read would have eaten
+        self.rp_bypasses = 0          # reads scheduled ahead of die backlog
+        self.rp_wait_saved_ns = 0.0
+        self.qos_die_wait_max_ns = 0.0  # max die backlog seen at QoS'd
+        #                                 host-read issue (queue occupancy)
 
     # ---- epoch bumps (called by the ssd.py views and HostLru) ----
     def bump(self, page: int) -> None:

@@ -275,17 +275,24 @@ class BatchedMachine(Machine):
             memoryview(ds.log_bits) if cfg.enable_write_log else None,
             ds.log_cap,
             # physical service-path routing (None/0 under the legacy
-            # backend: the span then uses the logical hash stripe inline)
+            # backend: the span then uses the logical hash stripe inline).
+            # loc_div is the (channel, die) divisor: pp // loc_div is the
+            # block id normally (per-die blocks), pp itself under
+            # superblock striping (ftl.loc_div — ONE value covers every
+            # inlined derivation site with zero new branches).
             ds.flash.l2p_mv if ds.flash is not None else None,
-            ds.flash.ppb if ds.flash is not None else 0,
+            self.ftl.loc_div if ds.flash is not None else 0,
             ds.gc_die_from, ds.gc_die_until,
-            # fault injection: the bound Channels.read when a FaultModel
-            # is attached, else None. Fault-affected flash reads are a
-            # conflict class — the span routes them through the shared
-            # method (retry ladder, outages, scheduled power loss / die
-            # failure) instead of its inlined timing mirror, so both
-            # engines consume the identical fault stream.
-            self.channels.read if self.channels.fault is not None else None,
+            # fault injection / die-level QoS: the bound Channels.read
+            # when a FaultModel or QosModel is attached, else None. Both
+            # are conflict classes — the span routes affected flash reads
+            # through the shared method (retry ladder, outages, scheduled
+            # events; GC suspend/resume, read-priority arbitration)
+            # instead of its inlined timing mirror, so both engines
+            # consume the identical fault stream / arbitration decisions.
+            self.channels.read
+            if (self.channels.fault is not None
+                or self.channels.qos is not None) else None,
         )
 
     def _columns(self, th: Thread):
@@ -609,9 +616,10 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
      promo_thr, lat_host, base, cache_idx, dram, lat_log, lat_cache,
      ctx_ns, ctx_thr, chan_bus, chan_die, n_ch, t_read, rd_busy,
      ftl_write, max_out, ctx_on, logbits, log_cap,
-     l2p, ppb, gc_from, gc_until, f_read) = m._span_env
+     l2p, loc_div, gc_from, gc_until, f_read) = m._span_env
     block_route = l2p is not None
     lat_hist = st.lat_hist
+    lat_hist_w = st.lat_hist_w
     lb = _lat_bin
     log_on = logbits is not None
     if log_on:
@@ -691,7 +699,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 # FTL, logical hash stripe under legacy), then inlined
                 # Channels.read at now = t + stall
                 if block_route:
-                    blk = l2p[p] // ppb
+                    blk = l2p[p] // loc_div
                     ch = blk % n_ch
                     dd = (blk // n_ch) % DIES_PER_CHANNEL
                 else:
@@ -735,7 +743,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 lat = stall + base + cache_idx + dram
                 if stall > 0.0:  # variable latency: tail-histogram it
                     st.ssd_w_var += 1
-                    lat_hist[lb(lat)] += 1
+                    lat_hist_w[lb(lat)] += 1
                 lat_sum += lat
                 lat_hit_acc += lat
                 t += lat
@@ -748,7 +756,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             # boundary paths like this one), the logical stripe under
             # legacy. ----
             if block_route:
-                blk = l2p[p] // ppb
+                blk = l2p[p] // loc_div
                 ch = blk % n_ch
                 dd = (blk // n_ch) % DIES_PER_CHANNEL
             else:
@@ -984,7 +992,7 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
         # location is the page's physical placement (live l2p) under the
         # block FTL, the logical hash stripe under legacy. ----
         if block_route:
-            blk = l2p[p] // ppb
+            blk = l2p[p] // loc_div
             ch = blk % n_ch
             dd = (blk // n_ch) % DIES_PER_CHANNEL
         else:
@@ -1310,7 +1318,7 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                     + cfg.ssd_dram_ns
                 if stall > 0.0:  # variable latency: tail-histogram it
                     m.stats.ssd_w_var += 1
-                    m.stats.lat_hist[_lat_bin(lat)] += 1
+                    m.stats.lat_hist_w[_lat_bin(lat)] += 1
                 t += lat
                 _record(m.stats, "ssd_w", lat)
                 i += 1
@@ -1458,15 +1466,19 @@ def run_fused(m: BatchedMachine, cfg: SimConfig, threads) -> list:
     unchanged. Inline-only configs (tpp/astriflash: per-event RNG order)
     and dram-only runs (pure vector path) use the plain scheduler around
     batched_quantum directly. Returns the per-core clock list."""
-    if m._inline_only or cfg.dram_only or m.channels.fault is not None:
-        # Fault injection is a conflict class: the mega-loop's three
-        # inlined flash-read sites would bypass the FaultModel (retry
-        # ladders, outages, scheduled power loss / die failure), and a
-        # power-loss restart mutates cache/timeline state out from under
-        # the fused loop's hoisted locals. The scheduler + batched_quantum
-        # route every flash read through the shared Channels.read (the
-        # span's miss sites dispatch to it via _span_env's f_read), so
-        # parity with the reference engine holds with faults on.
+    if (m._inline_only or cfg.dram_only or m.channels.fault is not None
+            or m.channels.qos is not None):
+        # Fault injection and die-level QoS are conflict classes: the
+        # mega-loop's three inlined flash-read sites would bypass the
+        # FaultModel (retry ladders, outages, scheduled power loss / die
+        # failure) and the QosModel (GC suspend/resume, read-priority
+        # arbitration), and a power-loss restart mutates cache/timeline
+        # state out from under the fused loop's hoisted locals. The
+        # scheduler + batched_quantum route every flash read through the
+        # shared Channels.read (the span's miss sites dispatch to it via
+        # _span_env's f_read), so parity with the reference engine holds
+        # with faults or QoS on. Note superblock alone is NOT a conflict:
+        # it changes the loc_div placement divisor, not arbitration.
         return _run_scheduler(m, cfg, threads, batched_quantum)
     m._threads = threads
     st = m.stats
@@ -1497,10 +1509,11 @@ def run_fused(m: BatchedMachine, cfg: SimConfig, threads) -> list:
      promo_thr, lat_host, base, cache_idx, dram, lat_log, lat_cache,
      ctx_ns, ctx_thr, chan_bus, chan_die, n_ch, t_read, rd_busy,
      ftl_write, max_out, ctx_on, logbits, log_cap,
-     l2p, ppb, gc_from, gc_until, f_read) = m._span_env
+     l2p, loc_div, gc_from, gc_until, f_read) = m._span_env
     block_route = l2p is not None
     log_on = logbits is not None
     lat_hist = st.lat_hist
+    lat_hist_w = st.lat_hist_w
     lb = _lat_bin
     journal_clear = journal.clear
     # host tier only ever gains pages through _maybe_promote: constant gate
@@ -1718,7 +1731,7 @@ def run_fused(m: BatchedMachine, cfg: SimConfig, threads) -> list:
                             if oldest > t:
                                 stall = oldest - t
                         if block_route:
-                            blk = l2p[p] // ppb
+                            blk = l2p[p] // loc_div
                             ch = blk % n_ch
                             dd = (blk // n_ch) % DIES_PER_CHANNEL
                         else:
@@ -1791,14 +1804,14 @@ def run_fused(m: BatchedMachine, cfg: SimConfig, threads) -> list:
                         lat = stall + base + cache_idx + dram
                         if stall > 0.0:  # variable latency: histogram it
                             ssd_w_var_n += 1
-                            lat_hist[lb(lat)] += 1
+                            lat_hist_w[lb(lat)] += 1
                         lat_sum += lat
                         lat_hit_acc += lat
                         t += lat
                         continue
                     # ---- flash read miss (Algorithm 1 park decision) ----
                     if block_route:
-                        blk = l2p[p] // ppb
+                        blk = l2p[p] // loc_div
                         ch = blk % n_ch
                         dd = (blk // n_ch) % DIES_PER_CHANNEL
                     else:
@@ -2021,7 +2034,7 @@ def run_fused(m: BatchedMachine, cfg: SimConfig, threads) -> list:
                         continue
                     # ---- flash read miss (Algorithm 1 park decision) ----
                     if block_route:
-                        blk = l2p[p] // ppb
+                        blk = l2p[p] // loc_div
                         ch = blk % n_ch
                         dd = (blk // n_ch) % DIES_PER_CHANNEL
                     else:

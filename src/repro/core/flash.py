@@ -53,6 +53,13 @@ default) with real erase-block state, so the write log's coalescing
   * **Wear / WAF accounting** — per-block erase counts and a migrated-
     page counter; ``Stats.waf`` is (host programs + migrated pages) /
     host programs.
+  * **Superblock striping** (``SimConfig.superblock``) — route the
+    physical PAGE instead of the block (``loc_div`` = 1 vs ``ppb``), so
+    a block's pages fan across channels/dies: stripe-parallel reads,
+    but a GC victim's blast radius spans every die the stripe touches
+    (``_gc_once_super``). GC windows also refill the per-die bounded
+    suspend budget (``gc_susp_left``/``gc_windows``) that the die-level
+    QoS arbiter (core/qos.py) consumes.
 
 Exactness contract with the batched engine: every flash program happens
 on a *boundary* path (dirty evictions, compaction drains, Base-CSSD
@@ -210,6 +217,30 @@ class BlockFtl:
         self.program_ns = cfg.flash.program_ns
         self.erase_ns = cfg.flash.erase_ns
         self.n_channels = cfg.n_channels
+        # superblock striped-frontier placement: pages of a block stripe
+        # page-by-page across channels then dies instead of the whole
+        # block living on blk_loc's single die. loc_div is the service-
+        # path divisor that unifies both derivations — location is
+        # blk_loc(pp // loc_div): loc_div == ppb collapses pp to its
+        # block id (per-die blocks), loc_div == 1 routes the physical
+        # page itself (striped). The engines' inlined read sites use the
+        # same divisor (engine._span_env), so the default layout stays
+        # bit-identical with zero new branches.
+        self.superblock = bool(cfg.superblock)
+        self.loc_div = 1 if self.superblock else self.fs.ppb
+        self.susp_max = cfg.gc_suspend_max
+        # promotion-placement interplay (superblock + hotcold + the
+        # paper's counter-threshold promotion): a page the estimator is
+        # one access away from promoting will leave flash for host DRAM —
+        # its flash rewrite stream is about to STOP, so letting it anchor
+        # the hot frontier seals "hot" stripes around pages that never
+        # die there. Gated to superblock mode so the per-die hotcold
+        # layout stays the PR 5 behaviour bit-for-bit.
+        self._promo_gate = (self.superblock and cfg.hotcold
+                            and cfg.enable_promotion
+                            and cfg.promo_policy == "skybyte")
+        self._acc_mv = state.acc._mv if self._promo_gate else None
+        self._promo_thr = cfg.promote_threshold
         # Greedy victim selection keeps a lazy min-heap of (valid, block)
         # over sealed blocks instead of an argmin scan per GC round: an
         # entry is pushed whenever a block seals and whenever a SEALED
@@ -245,8 +276,10 @@ class BlockFtl:
         block-id-derived (``blk_loc``), consistent with where GC busy
         windows and frontier programs land. This is what every read and
         program queues on under ``ftl_backend="block"``; the legacy
-        backend's logical hash lives in ``Channels.logical_loc``."""
-        return blk_loc(self.fs.l2p_mv[page] // self.fs.ppb, self.n_channels)
+        backend's logical hash lives in ``Channels.logical_loc``. With
+        ``superblock`` the divisor is 1: the physical PAGE id routes, so
+        a block's pages fan across channels then dies."""
+        return blk_loc(self.fs.l2p_mv[page] // self.loc_div, self.n_channels)
 
     # ---- host program path (dirty evictions, compaction flush, Base
     # write-allocate fills) ----
@@ -277,13 +310,22 @@ class BlockFtl:
         hot = fs.hot_blk >= 0 and old >= 0 and not fs.blk_gc_mv[ob] and (
             bstate[ob] == 1
             or fs.seal_seq - fs.blk_seal_mv[ob] <= fs.heat_win)
+        if hot and self._acc_mv is not None \
+                and self._acc_mv[page] + 1 >= self._promo_thr:
+            # one access from promotion: this copy's rewrite stream moves
+            # to host DRAM, so it must not anchor a hot stripe (see
+            # __init__'s _promo_gate rationale)
+            hot = False
         b = fs.hot_blk if hot else fs.host_blk
         slot = fs.hot_slot if hot else fs.host_slot
-        # charge the program at the destination block's channel/die
-        # (same bus->die recipe as Channels.write; blk_loc inlined)
+        # charge the program at the destination's channel/die (same
+        # bus->die recipe as Channels.write; blk_loc inlined). Superblock
+        # routes the destination SLOT's stripe position, per-die blocks
+        # route the block id — the same loc_div unification as phys_loc.
         n_ch = self.n_channels
-        ch = b % n_ch
-        d = (b // n_ch) % DIES_PER_CHANNEL
+        lb = b * ppb + slot if self.superblock else b
+        ch = lb % n_ch
+        d = (lb // n_ch) % DIES_PER_CHANNEL
         bus = s.chan_bus[ch]
         xfer_end = (now if now > bus else bus) + TRANSFER_NS
         s.chan_bus[ch] = xfer_end
@@ -375,10 +417,11 @@ class BlockFtl:
     # ---- garbage collection ----
     def _collect(self, now: float) -> None:
         fs = self.fs
+        step = self._gc_once_super if self.superblock else self._gc_once
         guard = fs.n_blocks  # each round erases one block; hard bound
         while len(fs.free) <= fs.reserve and guard > 0:
             guard -= 1
-            if not self._gc_once(now):
+            if not step(now):
                 break
 
     def _pick_victim(self) -> int:
@@ -433,7 +476,12 @@ class BlockFtl:
         start = now if now > dv else dv
         die[d] = start + self.erase_ns + n_live * self.read_ns
         if start > s.gc_die_until[ch][d]:
+            # new window (vs merging into a live one): refill the die's
+            # bounded suspend budget and count it for the suspends-per-
+            # window QoS bound
             s.gc_die_from[ch][d] = start
+            s.gc_susp_left[ch][d] = self.susp_max
+            s.gc_windows += 1
         s.gc_die_until[ch][d] = die[d]
         bus = s.chan_bus[ch]
         s.chan_bus[ch] = (now if now > bus else bus) \
@@ -467,6 +515,8 @@ class BlockFtl:
             vh = self._vic_heap
             heappush = heapq.heappush
             arange = np.arange
+            susp_left = s.gc_susp_left
+            susp_max = self.susp_max
             x = 0
             while x < n_live:
                 b2 = fs.gc_blk
@@ -490,6 +540,8 @@ class BlockFtl:
                 # migration programs are GC work: extend/merge the window
                 if st2 > gu:
                     gf = st2
+                    susp_left[ch2][d2] = susp_max
+                    s.gc_windows += 1
                 busy += busy_inc
                 # pages 2..seg: after the first program, bus2 and dv2 sit
                 # strictly past `now` and each page's start time equals
@@ -562,6 +614,149 @@ class BlockFtl:
                 else:
                     fs.gc_slot = slot
             s.chan_busy_ns = busy
+        s.gc_migrated_pages += n_live
+        # erase the victim back into the pool
+        fs.pvalid[base:base + ppb] = False
+        fs.blk_valid_mv[b] = 0
+        fs.blk_erase_mv[b] += 1
+        fs.blk_state_mv[b] = 0
+        fs.free.append(b)
+        s.gc_events += 1
+        if self._check_every and s.gc_events % self._check_every == 0:
+            check_invariants(fs, degraded=bool(s.ft_degraded))
+        return True
+
+    def _gc_once_super(self, now: float) -> bool:
+        """One GC round under superblock striping. Identical mapping
+        outcome to ``_gc_once`` (victim pick, migration order, seal/pop
+        bookkeeping, degraded abort are byte-for-byte the same state
+        machine), but the PHYSICAL footprint inverts: the victim's pages
+        live on up to min(ppb, n_channels * DIES_PER_CHANNEL) distinct
+        dies, so the erase + read-out carves a SHALLOW window
+        (erase_ns + per-die-live * read_ns) on EVERY die the stripe
+        touches instead of one deep window on one die — stripe-parallel
+        reads buy bandwidth, GC buys blast radius. Each migrated page is
+        likewise programmed at its own stripe position's die, so the
+        degenerate same-die float chain that lets ``_gc_once`` collapse a
+        segment to three adds never forms; the per-page loop runs the
+        full bus->die recipe (scalar, bit-exact by construction since
+        both engines call this one method)."""
+        fs = self.fs
+        s = self.s
+        if s.ft_degraded or fs.gc_blk < 0:
+            return False  # read-only: no frontier to migrate into
+        b = self._pick_victim()
+        if b < 0:
+            return False
+        ppb = fs.ppb
+        if fs.blk_valid_mv[b] >= ppb and not fs.free:
+            return False  # fully-valid victim cannot free net space
+        base = b * ppb
+        live = np.flatnonzero(fs.pvalid[base:base + ppb])
+        n_live = int(live.size)
+        n_ch = self.n_channels
+        read_ns = self.read_ns
+        erase_ns = self.erase_ns
+        susp_max = self.susp_max
+        # --- erase + read-out, grouped per die the stripe touches. The
+        # erase must hit every die holding a slice (all ppb slots, live
+        # or not); the read-outs only the live ones. Slice order (pp
+        # ascending) fixes the iteration order deterministically. ---
+        die_live = {}
+        for off in range(ppb):
+            pp = base + off
+            loc = (pp % n_ch, (pp // n_ch) % DIES_PER_CHANNEL)
+            if loc not in die_live:
+                die_live[loc] = 0
+        chan_xfer = {}
+        for off in live.tolist():
+            pp = base + off
+            loc = (pp % n_ch, (pp // n_ch) % DIES_PER_CHANNEL)
+            die_live[loc] += 1
+            chan_xfer[loc[0]] = chan_xfer.get(loc[0], 0) + 1
+        for (ch, d), nl in die_live.items():
+            die = s.chan_die[ch]
+            dv = die[d]
+            start = now if now > dv else dv
+            die[d] = start + erase_ns + nl * read_ns
+            if start > s.gc_die_until[ch][d]:
+                s.gc_die_from[ch][d] = start
+                s.gc_susp_left[ch][d] = susp_max
+                s.gc_windows += 1
+            s.gc_die_until[ch][d] = die[d]
+            s.chan_busy_ns += erase_ns / DIES_PER_CHANNEL \
+                + nl * (read_ns / DIES_PER_CHANNEL)
+        for ch, nx in chan_xfer.items():
+            bus = s.chan_bus[ch]
+            s.chan_bus[ch] = (now if now > bus else bus) + nx * TRANSFER_NS
+            s.chan_busy_ns += nx * TRANSFER_NS
+        # --- migrate live pages to the GC frontier, one stripe position
+        # (hence usually one distinct die) per page ---
+        if n_live:
+            program_ns = self.program_ns
+            busy_inc = TRANSFER_NS + program_ns / DIES_PER_CHANNEL
+            l2p = fs.l2p_mv
+            p2l = fs.p2l_mv
+            pvalid = fs.pvalid_mv
+            bvalid = fs.blk_valid_mv
+            vh = self._vic_heap
+            heappush = heapq.heappush
+            offs = live.tolist()
+            x = 0
+            for off in offs:
+                src = base + off
+                lp = p2l[src]
+                b2 = fs.gc_blk
+                slot = fs.gc_slot
+                pp2 = b2 * ppb + slot
+                ch2 = pp2 % n_ch
+                d2 = (pp2 // n_ch) % DIES_PER_CHANNEL
+                bus2 = s.chan_bus[ch2]
+                s.chan_bus[ch2] = (now if now > bus2 else bus2) + TRANSFER_NS
+                die2 = s.chan_die[ch2]
+                dv2 = die2[d2]
+                st2 = now if now > dv2 else dv2
+                dv2 = st2 + program_ns
+                die2[d2] = dv2
+                if st2 > s.gc_die_until[ch2][d2]:
+                    s.gc_die_from[ch2][d2] = st2
+                    s.gc_susp_left[ch2][d2] = susp_max
+                    s.gc_windows += 1
+                s.gc_die_until[ch2][d2] = dv2
+                s.chan_busy_ns += busy_inc
+                l2p[lp] = pp2
+                p2l[pp2] = lp
+                pvalid[pp2] = True
+                p2l[src] = -1
+                bvalid[b2] += 1
+                x += 1
+                slot += 1
+                if slot >= ppb:  # GC frontier sealed: open a fresh block
+                    fs.blk_state_mv[b2] = 2
+                    fs.seal_seq += 1
+                    fs.blk_seal_mv[b2] = fs.seal_seq
+                    if vh is not None:
+                        heappush(vh, (bvalid[b2], b2))
+                    nb = self._pop_free()
+                    if nb < 0:
+                        # spares exhausted mid-migration: same abort
+                        # fixup as _gc_once — invalidate the migrated
+                        # prefix's source slots (the erase below cannot
+                        # happen) and leave the victim sealed.
+                        fs.gc_blk = -1
+                        fs.gc_slot = 0
+                        fs.pvalid[base + live[:x]] = False
+                        bvalid[b] = bvalid[b] - x
+                        if vh is not None:
+                            heappush(vh, (bvalid[b], b))
+                        s.gc_migrated_pages += x
+                        return False
+                    fs.blk_state_mv[nb] = 1
+                    fs.blk_gc_mv[nb] = True  # GC-written data: never "hot"
+                    fs.gc_blk = nb
+                    fs.gc_slot = 0
+                else:
+                    fs.gc_slot = slot
         s.gc_migrated_pages += n_live
         # erase the victim back into the pool
         fs.pvalid[base:base + ppb] = False

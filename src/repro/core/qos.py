@@ -1,0 +1,182 @@
+"""Die-level QoS arbitration: GC suspend/resume + read-priority scheduling.
+
+The device carves per-die GC windows ([gc_die_from, gc_die_until], see
+flash._gc_once) and, without QoS, any host read targeting that die simply
+waits the window out — PR 5 made the pause visible (gc_pause_ns_total),
+this module shrinks it. Two mechanisms, both per-die, both applied at the
+single read-arbitration point:
+
+GC suspend/resume (``cfg.gc_suspend``)
+    A host read arriving inside a carved window preempts the in-flight
+    GC chain: the read waits only ``gc_suspend_ns`` (the time for the
+    erase/program slice to reach a suspendable point), senses, and the
+    suspended GC work resumes BEHIND it with a fixed ``gc_resume_ns``
+    re-setup penalty. The die's backlog and the window are both pushed
+    back by exactly ``read_ns + gc_resume_ns``. Suspends are bounded per
+    window (``gc_suspend_max``, refilled at each new carve) so a read
+    storm cannot starve cleaning.
+
+Read-priority arbitration (``cfg.read_priority``)
+    Two queue-jump points, one per contended resource. DIE: outside GC
+    windows, a read that would queue behind more than
+    ``read_priority_wait_ns`` of die backlog (host + GC programs) is
+    scheduled ahead of the queued work — it waits only the cap (the
+    in-flight op cannot be preempted), and the displaced programs are
+    pushed back by the read's die occupancy (``read_ns``). CHANNEL BUS:
+    a read whose sensed data would queue behind more than one 800ns
+    transfer jumps the bus queue (write bursts convoy transfers behind
+    the frontier's channel — frequently the dominant read wait, since
+    programs overlap across dies but transfers serialize per channel),
+    waiting at most the one in-flight transfer.
+
+Like the fault model (core/faults.py), QoS-active reads are a CONFLICT
+CLASS: ``Machine.__init__`` attaches one QosModel to ``Channels.qos``,
+``Channels.read`` and the inline span's ``f_read`` sites both dispatch to
+``QosModel.read``, and ``run_fused`` refuses QoS-active configs — both
+engines therefore execute the identical arbitration code and stay
+bit-exact by construction. Zero-QoS configs attach nothing and pay one
+``is not None`` test per flash read.
+
+All mutable accounting lives on DeviceState; this class is pure policy +
+cached config scalars.
+"""
+from __future__ import annotations
+
+from repro.configs.base import SimConfig
+from repro.core.device_state import DIES_PER_CHANNEL, DeviceState
+from repro.core.ssd import TRANSFER_NS, Channels
+
+
+class QosModel:
+    """Single shared read-arbitration function for both replay engines."""
+
+    __slots__ = ("cfg", "s", "read_ns", "rd_busy",
+                 "suspend", "suspend_ns", "resume_ns",
+                 "rp", "rp_cap")
+
+    def __init__(self, cfg: SimConfig, state: DeviceState,
+                 channels: Channels):
+        self.cfg = cfg
+        self.s = state
+        self.read_ns = channels.read_ns
+        self.rd_busy = TRANSFER_NS + channels.read_ns / DIES_PER_CHANNEL
+        self.suspend = cfg.gc_suspend
+        self.suspend_ns = cfg.gc_suspend_ns
+        self.resume_ns = cfg.gc_resume_ns
+        self.rp = cfg.read_priority
+        self.rp_cap = cfg.read_priority_wait_ns
+
+    def read(self, ch: int, d: int, now: float,
+             gc_attr: bool = True) -> float:
+        """KEEP IN SYNC with ssd.Channels.read — the default (no
+        mechanism engaging) path below must replay its timing recipe and
+        GC-pause attribution bit-for-bit; QoS only ever REPLACES the
+        blocked branches. ``gc_attr=False`` device-internal reads take the
+        plain path unconditionally: no thread blocks on them, so there is
+        nothing to prioritize and preempting GC for them would burn the
+        bounded suspend budget on invisible latency."""
+        s = self.s
+        read_ns = self.read_ns
+        die = s.chan_die[ch]
+        dv = die[d]
+        rp = self.rp and gc_attr
+        if gc_attr and dv > now:
+            wait = dv - now
+            # per-die queue-occupancy telemetry: max backlog a host read
+            # observed at issue (fig_gc_tail's occupancy column)
+            if wait > s.qos_die_wait_max_ns:
+                s.qos_die_wait_max_ns = wait
+            gu = s.gc_die_until[ch][d]
+            if gu > now:
+                gf = s.gc_die_from[ch][d]
+                lo = now if now > gf else gf
+                hi = dv if dv < gu else gu
+                pause = hi - lo
+                if pause > 0.0:
+                    if (self.suspend and s.gc_susp_left[ch][d] > 0
+                            and pause > self.suspend_ns):
+                        return self._suspend_read(ch, d, now, dv, gu, pause)
+                    # budget exhausted / pause already short: standard
+                    # attribution, wait the window out (Channels.read)
+                    s.gc_stall_events += 1
+                    s.gc_pause_ns_total += pause
+                    if pause > s.gc_pause_max_ns:
+                        s.gc_pause_max_ns = pause
+            elif rp and wait > self.rp_cap:
+                # --- read-priority DIE bypass (no GC window on this die:
+                # windows belong to the suspend mechanism). The read is
+                # scheduled ahead of the QUEUED programs: it waits only
+                # the cap (the in-flight op cannot be preempted), and the
+                # displaced backlog finishes late by the read's die
+                # occupancy. ---
+                start = now + self.rp_cap
+                sensed = start + read_ns
+                nd = dv + read_ns
+                die[d] = nd if nd > sensed else sensed
+                s.rp_bypasses += 1
+                s.rp_wait_saved_ns += wait - self.rp_cap
+                return self._xfer(ch, sensed, rp)
+        start = now if now > dv else dv
+        sensed = start + read_ns
+        die[d] = sensed
+        return self._xfer(ch, sensed, rp)
+
+    def _xfer(self, ch: int, sensed: float, rp: bool) -> float:
+        """Channel-bus stage of a read. Without read priority this IS
+        Channels.read's tail (done = max(sensed, bus) + TRANSFER_NS, read
+        queued at the bus tail). With it, a read whose data would queue
+        behind more than one transfer jumps the bus queue: write bursts
+        convoy 800ns transfers behind the frontier's channel (often the
+        dominant read wait — programs overlap across dies but every
+        transfer serializes on the channel), and an arbiter can reorder
+        queued transfers even though it cannot preempt the in-flight one.
+        The read therefore waits at most ONE residual transfer after its
+        data is sensed, and the displaced queue finishes one transfer
+        late."""
+        s = self.s
+        bus = s.chan_bus[ch]
+        if rp and bus - sensed > TRANSFER_NS:
+            done = sensed + TRANSFER_NS + TRANSFER_NS
+            s.chan_bus[ch] = bus + TRANSFER_NS
+            s.rp_bypasses += 1
+            s.rp_wait_saved_ns += (bus - sensed) - TRANSFER_NS
+        else:
+            done = (sensed if sensed > bus else bus) + TRANSFER_NS
+            s.chan_bus[ch] = done
+        s.chan_busy_ns += self.rd_busy
+        s.flash_reads += 1
+        return done
+
+    def _suspend_read(self, ch: int, d: int, now: float, dv: float,
+                      gu: float, pause: float) -> float:
+        """Preempt the die's GC chain for one host read.
+
+        Timing contract (DESIGN.md "Die-level QoS"): the read senses at
+        ``now + suspend_ns``; every piece of work that was scheduled
+        after that instant — the suspended GC remainder (``rem``) and the
+        window end — shifts back by exactly ``read_ns + resume_ns``. The
+        residual ``suspend_ns`` the read still waited is booked through
+        the standard gc_pause counters (it IS GC-induced), and the pause
+        it dodged lands in gc_pause_avoided_ns, so
+        pause_without_qos == pause_ns_total + pause_avoided_ns holds per
+        suspension."""
+        s = self.s
+        read_ns = self.read_ns
+        resume_ns = self.resume_ns
+        suspend_ns = self.suspend_ns
+        s.gc_susp_left[ch][d] -= 1
+        start = now + suspend_ns
+        rem = dv - start  # GC work displaced behind the read (> 0: the
+        #                   guard requires pause > suspend_ns)
+        sensed = start + read_ns
+        s.chan_die[ch][d] = sensed + resume_ns + rem
+        s.gc_die_until[ch][d] = gu + (read_ns + resume_ns)
+        s.gc_suspends += 1
+        s.gc_resumes += 1
+        s.gc_resume_ns_total += resume_ns
+        s.gc_pause_avoided_ns += pause - suspend_ns
+        s.gc_stall_events += 1
+        s.gc_pause_ns_total += suspend_ns
+        if suspend_ns > s.gc_pause_max_ns:
+            s.gc_pause_max_ns = suspend_ns
+        return self._xfer(ch, sensed, self.rp)

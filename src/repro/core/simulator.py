@@ -102,9 +102,15 @@ class Stats:
         "promotions", "demotions",
         "exec_ns", "busy_ns", "replays",
         "lat_p50_ns", "lat_p95_ns", "lat_p99_ns",
-        # variable-latency bookkeeping (lat_hist is engine-internal: the
-        # percentiles above are its exported summary)
-        "ssd_w_var", "lat_hist",
+        # read-only percentiles (host reads + log/cache read hits + flash
+        # read misses; posted writes and their slot stalls excluded).
+        # Read priority deliberately trades write tail for read tail, so
+        # the mixed percentiles above cannot see its win.
+        "lat_read_p50_ns", "lat_read_p95_ns", "lat_read_p99_ns",
+        # variable-latency bookkeeping (the histograms are engine-internal:
+        # the percentiles above are their exported summary; lat_hist holds
+        # flash READ misses, lat_hist_w the variable write-slot stalls)
+        "ssd_w_var", "lat_hist", "lat_hist_w",
         # fault / recovery (folded from DeviceState.ft_*; all zero unless
         # a FaultConfig knob is on)
         "retry_reads", "retry_steps", "uncorrectable_reads", "uber",
@@ -113,15 +119,22 @@ class Stats:
         "power_loss_events", "recovery_ns_total", "recovery_ns_max",
         "replayed_pages", "lost_dirty_pages", "lost_inflight",
         "degraded_mode", "degraded_writes",
+        # die-level QoS (folded from DeviceState; gc_windows is live on
+        # every run, the rest only move with a QosModel attached)
+        "gc_windows", "gc_suspends", "gc_resumes", "gc_resume_ns_total",
+        "gc_pause_avoided_ns",
+        "rp_bypasses", "rp_wait_saved_ns", "qos_die_wait_max_ns",
     )
 
     def __init__(self):
         for f in self.__slots__:
             setattr(self, f, 0)
         self.lat_hist = np.zeros(_LAT_NBINS, np.int64)
+        self.lat_hist_w = np.zeros(_LAT_NBINS, np.int64)
 
     def as_dict(self) -> Dict[str, Any]:
-        d = {f: getattr(self, f) for f in self.__slots__ if f != "lat_hist"}
+        d = {f: getattr(self, f) for f in self.__slots__
+             if f not in ("lat_hist", "lat_hist_w")}
         n = max(self.n, 1)
         d["amat_ns"] = self.lat_sum / n
         d["flash_write_bytes"] = self.flash_write_pages * PAGE
@@ -138,6 +151,15 @@ class Stats:
         self.gc_pause_ns_total = ds.gc_pause_ns_total
         self.gc_pause_max_ns = ds.gc_pause_max_ns
         self.gc_stall_events = ds.gc_stall_events
+        # die-level QoS counters (core/qos.py; zero when QoS off)
+        self.gc_windows = ds.gc_windows
+        self.gc_suspends = ds.gc_suspends
+        self.gc_resumes = ds.gc_resumes
+        self.gc_resume_ns_total = ds.gc_resume_ns_total
+        self.gc_pause_avoided_ns = ds.gc_pause_avoided_ns
+        self.rp_bypasses = ds.rp_bypasses
+        self.rp_wait_saved_ns = ds.rp_wait_saved_ns
+        self.qos_die_wait_max_ns = ds.qos_die_wait_max_ns
         fw = ds.flash_writes
         self.waf = (fw + ds.gc_migrated_pages) / fw if fw else 1.0
         # fault / recovery counters (core/faults.py; zero when faults off)
@@ -162,31 +184,49 @@ class Stats:
         lat_log = cfg.cxl_protocol_ns + cfg.log_index_ns + cfg.ssd_dram_ns
         lat_cache = cfg.cxl_protocol_ns + cfg.cache_index_ns + cfg.ssd_dram_ns
         ssd_w_const = self.ssd_w - self.ssd_w_var
-        items = [
-            (cfg.host_dram_ns, self.host_r + self.host_w),
-            (lat_log, self.hit_log
-             + (ssd_w_const if cfg.enable_write_log else 0)),
-            (lat_cache, self.hit_cache
-             + (0 if cfg.enable_write_log else ssd_w_const)),
+        # read-side classes: host-DRAM reads, log/cache read hits, and the
+        # flash-read-miss histogram
+        r_items = [
+            (cfg.host_dram_ns, self.host_r),
+            (lat_log, self.hit_log),
+            (lat_cache, self.hit_cache),
         ]
-        items.extend((_lat_bin_edge(b), int(c))
-                     for b, c in enumerate(self.lat_hist.tolist()) if c)
-        items = sorted(it for it in items if it[1] > 0)
-        total = self.n
-        for field, q in (("lat_p50_ns", 0.50), ("lat_p95_ns", 0.95),
-                         ("lat_p99_ns", 0.99)):
-            if not total:
-                setattr(self, field, 0.0)
-                continue
-            rank = max(int(np.ceil(q * total)), 1)
-            cum = 0
-            val = items[-1][0] if items else 0.0
-            for v, c in items:
-                cum += c
-                if cum >= rank:
-                    val = v
-                    break
-            setattr(self, field, float(val))
+        r_items.extend((_lat_bin_edge(b), int(c))
+                       for b, c in enumerate(self.lat_hist.tolist()) if c)
+        # write-side classes: host-DRAM writes, constant-latency posted
+        # writes (log-indexed when the write log is on, cache-indexed
+        # otherwise), and the variable write-slot-stall histogram
+        w_items = [
+            (cfg.host_dram_ns, self.host_w),
+            (lat_log if cfg.enable_write_log else lat_cache, ssd_w_const),
+        ]
+        w_items.extend((_lat_bin_edge(b), int(c))
+                       for b, c in enumerate(self.lat_hist_w.tolist()) if c)
+        n_reads = self.host_r + self.hit_log + self.hit_cache \
+            + self.miss_flash
+        # the combined list is the same multiset the pre-split histogram
+        # produced (duplicate constant-latency entries merge under the
+        # sort), so lat_p* stay bit-identical to the one-histogram era
+        for fields, items, total in (
+            (("lat_p50_ns", "lat_p95_ns", "lat_p99_ns"),
+             r_items + w_items, self.n),
+            (("lat_read_p50_ns", "lat_read_p95_ns", "lat_read_p99_ns"),
+             r_items, n_reads),
+        ):
+            srt = sorted(it for it in items if it[1] > 0)
+            for field, q in zip(fields, (0.50, 0.95, 0.99)):
+                if not total:
+                    setattr(self, field, 0.0)
+                    continue
+                rank = max(int(np.ceil(q * total)), 1)
+                cum = 0
+                val = srt[-1][0] if srt else 0.0
+                for v, c in srt:
+                    cum += c
+                    if cum >= rank:
+                        val = v
+                        break
+                setattr(self, field, float(val))
 
 
 class Thread:
@@ -247,6 +287,17 @@ class Machine:
             self.channels.fault = self.fault
         else:
             self.fault = None
+        # die-level QoS (core/qos.py): same attach-only-when-on contract
+        # as faults — zero-QoS configs construct no QosModel and the read
+        # path keeps its is-None fast test. Config validation guarantees
+        # fault and qos are never both attached.
+        if cfg.qos_enabled:
+            from repro.core.qos import QosModel
+
+            self.qos = QosModel(cfg, self.state, self.channels)
+            self.channels.qos = self.qos
+        else:
+            self.qos = None
         self.cache = DataCache(cfg, self.state)
         self.log = WriteLog(cfg, self.state) if cfg.enable_write_log else None
         self.host = self.state.host
@@ -376,7 +427,7 @@ class Machine:
             lat = stall + base + cfg.cache_index_ns + cfg.ssd_dram_ns
             if stall > 0.0:  # variable latency: tail-histogram it
                 st.ssd_w_var += 1
-                st.lat_hist[_lat_bin(lat)] += 1
+                st.lat_hist_w[_lat_bin(lat)] += 1
             return lat, None, "ssd_w"
 
         # ---- read ----

@@ -67,6 +67,15 @@ class Channels:
         # when any FaultConfig knob is nonzero, else stays None and read()
         # pays one is-not-None test
         self.fault = None
+        # die-level QoS arbiter (core/qos.py); attached by
+        # Machine.__init__ when cfg.qos_enabled — same conflict-class
+        # contract and same is-not-None cost as the fault injector.
+        # Config validation forbids fault+QoS together, so at most one
+        # dispatch fires per read.
+        self.qos = None
+        # per-window suspend budget refill (see DeviceState.gc_susp_left);
+        # cached here for the legacy gc() carve below
+        self.gc_susp_max = cfg.gc_suspend_max
 
     def logical_loc(self, page: int) -> Tuple[int, int]:
         """Legacy page-interleaved striping: (channel, die) from the
@@ -96,6 +105,9 @@ class Channels:
         f = self.fault
         if f is not None:  # retry ladder / outages / scheduled events
             return f.read(ch, d, now, gc_attr)
+        q = self.qos
+        if q is not None:  # GC suspend/resume + read-priority arbitration
+            return q.read(ch, d, now, gc_attr)
         s = self.s
         die = s.chan_die[ch]
         dv = die[d]
@@ -147,9 +159,12 @@ class Channels:
         cost = cfg.flash.erase_ns + 8 * (cfg.flash.read_ns + cfg.flash.program_ns)
         start = max(now, s.chan_die[ch][d])
         s.chan_die[ch][d] = start + cost
-        # GC-pause window: merge with the previous one when contiguous
+        # GC-pause window: merge with the previous one when contiguous; a
+        # NEW window refills the die's bounded suspend budget
         if start > s.gc_die_until[ch][d]:
             s.gc_die_from[ch][d] = start
+            s.gc_susp_left[ch][d] = self.gc_susp_max
+            s.gc_windows += 1
         s.gc_die_until[ch][d] = s.chan_die[ch][d]
         s.chan_bus[ch] = max(now, s.chan_bus[ch]) + 8 * TRANSFER_NS
         s.chan_busy_ns += cost / DIES_PER_CHANNEL
