@@ -33,8 +33,10 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.configs.base import SimConfig
 from repro.core.simulator import simulate
+from repro.log import get_logger
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "sim"
+_LOG = get_logger(__name__)
 
 
 def physical_cores() -> int:
@@ -249,8 +251,8 @@ def warm_cache(cells: List[Dict[str, Any]], jobs: int = 1,
         stats["cls_cache_repairs"] += cls[2]
         tag = " on retry" if retried else ""
         if err:
-            print(f"# warm [{k + 1}/{len(todo)}] {name} FAILED{tag}: {err}",
-                  flush=True)
+            _LOG.warning("warm [%d/%d] %s FAILED%s: %s",
+                         k + 1, len(todo), name, tag, err)
             return False
         if verbose:
             print(f"# warm [{k + 1}/{len(todo)}] {name}{tag} "

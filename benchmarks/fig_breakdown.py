@@ -1,0 +1,81 @@
+"""Latency-breakdown component stack per (workload, variant).
+
+The paper's Fig. 17 tells the AMAT story as one bar per design point;
+this section re-tells it with the PR's latency-provenance layer: every
+host-visible completion is decomposed into additive nanosecond
+components (die queue, GC pause/suspend, recovery barrier, outage,
+flash sense, retry ladder, bus wait, transfer, write stall, plus the
+constant CXL/index/DRAM terms), and each cell's stack is the per-access
+mean of those components — the columns sum to (almost exactly) the
+cell's AMAT, the residual being only coordinated-context-switch
+overhead, which is charged to the timeline but not to any single
+access. Cells run obs-enabled on the batched engine (obs is a conflict
+class: this grid also keeps the non-fused scheduler path honest).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ObsConfig, SimConfig
+
+from benchmarks.common import (TOTAL_REQ, VARIANTS, WORKLOADS, cached_sim,
+                               collect_cells, print_csv)
+
+# stacked columns, in physical order along a request's path
+STACK = ("queue", "gc_pause", "gc_suspend", "recovery", "outage", "sense",
+         "retry", "bus_wait", "transfer", "wstall", "cxl", "cache_index",
+         "log_index", "ssd_dram", "host_dram")
+
+
+def run(total_req: int = TOTAL_REQ, force: bool = False):
+    cfg = dataclasses.replace(SimConfig(), obs=ObsConfig(enabled=True))
+    rows = []
+    for wl in WORKLOADS:
+        for v in VARIANTS:
+            r = cached_sim(wl, v, cfg=cfg, total_req=total_req, force=force)
+            ob = r.get("obs")
+            comps = ob["components"] if isinstance(ob, dict) else {}
+            n = max(r["n"], 1)
+            row = {"workload": wl, "variant": v,
+                   "amat_ns": round(r["amat_ns"], 1)}
+            stack = 0.0
+            for name in STACK:
+                t = comps.get(name, {}).get("total_ns", 0.0)
+                stack += t
+                row[f"{name}_ns"] = round(t / n, 1)
+            # the stack covers every nanosecond the requests themselves
+            # spent (conservation contract); AMAT minus the stack is the
+            # ctx-switch overhead the scheduler charged to the timeline
+            row["stack_ns"] = round(stack / n, 1)
+            if isinstance(ob, dict):
+                row["conservation"] = \
+                    "ok" if ob["conservation"]["pass"] else "FAIL"
+                row["miss_p99_queue_ns"] = \
+                    round(comps["queue"]["p99_ns"], 1)
+                row["miss_p99_gc_pause_ns"] = \
+                    round(comps["gc_pause"]["p99_ns"], 1)
+                row["miss_p99_bus_wait_ns"] = \
+                    round(comps["bus_wait"]["p99_ns"], 1)
+            rows.append(row)
+    return rows
+
+
+def cells(total_req: int = TOTAL_REQ):
+    """Cell specs this section will request (see common.collect_cells)."""
+    return collect_cells(run, total_req)
+
+
+def main(total_req: int = TOTAL_REQ, force: bool = False):
+    rows = run(total_req, force)
+    print_csv("fig_breakdown (per-access component stack, ns; "
+              "stack_ns ~= amat_ns minus ctx overhead)",
+              rows,
+              ["workload", "variant", "amat_ns", "stack_ns"]
+              + [f"{name}_ns" for name in STACK]
+              + ["miss_p99_queue_ns", "miss_p99_gc_pause_ns",
+                 "miss_p99_bus_wait_ns", "conservation"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

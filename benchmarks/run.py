@@ -30,8 +30,9 @@ import sys
 import time
 from pathlib import Path
 
-from repro.configs.base import SimConfig
+from repro.configs.base import ObsConfig, SimConfig
 from repro.core.simulator import simulate
+from repro.log import get_logger
 
 from benchmarks import (
     common,
@@ -45,6 +46,7 @@ from benchmarks import (
     fig21_dramsize,
     fig22_flashlat,
     fig23_migration,
+    fig_breakdown,
     fig_faults,
     fig_gc_tail,
     tab3_readlat,
@@ -65,9 +67,11 @@ SECTIONS = [
     ("fig23", fig23_migration, 600_000, 200_000),
     ("gc_tail", fig_gc_tail, 600_000, 200_000),
     ("faults", fig_faults, 600_000, 200_000),
+    ("breakdown", fig_breakdown, 600_000, 200_000),
 ]
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+_LOG = get_logger(__name__)
 
 
 # Calibration cells: a ctx-switch-bound cell (short quanta — the regime
@@ -113,6 +117,24 @@ def calibrate_engines(total_req: int = 200_000) -> dict:
             cell["vector_events"] = fstats["vector_events"]
             cell["fused_frac"] = round(_engine.fused_fraction(r["n"]), 4)
             cell["events_per_sec"] = cell["batched"]
+            # latency-provenance summary for the same cell (info-only in
+            # bench_diff: obs is an instrumentation layer, not a perf
+            # gate). One obs-enabled run on the batched engine — obs is a
+            # conflict class, so this also exercises the non-fused path.
+            cfg_obs = dataclasses.replace(
+                SimConfig(), engine="batched", obs=ObsConfig(enabled=True))
+            ob = simulate(workload, variant, cfg_obs,
+                          total_req=total_req, seed=0)["obs"]
+            cell["obs"] = {
+                "conservation_pass": ob["conservation"]["pass"],
+                "violations": ob["conservation"]["violations"],
+                "closure_fallbacks": ob["conservation"]["closure_fallbacks"],
+                "n_miss": ob["n_miss"],
+                "n_stall": ob["n_stall"],
+                "component_p99_ns": {
+                    k: v["p99_ns"] for k, v in ob["components"].items()
+                    if isinstance(v, dict) and "p99_ns" in v},
+            }
             out[f"{workload}/{variant}"] = cell
     finally:
         if forced is not None:
@@ -196,8 +218,8 @@ def main(argv=None) -> None:
             cells.extend(mod.cells(total_req=n))
             enumerated.add(name)
         except Exception as e:
-            print(f"# {name} cell enumeration FAILED: "
-                  f"{type(e).__name__}: {e}", file=sys.stderr)
+            _LOG.warning("%s cell enumeration FAILED: %s: %s",
+                         name, type(e).__name__, e)
     warm = common.warm_cache(cells, jobs=args.jobs, force=args.force)
     report["grid"] = warm
     print(f"# grid: {warm['cells_total']} cells requested, "
@@ -217,7 +239,7 @@ def main(argv=None) -> None:
             status = "ok"
         except Exception as e:  # keep the suite running
             status = f"{type(e).__name__}: {e}"
-            print(f"# {name} FAILED: {status}", file=sys.stderr)
+            _LOG.warning("%s FAILED: %s", name, status)
         wall = time.time() - t1
         # render cpu (process_time covers in-process cell sims too): the
         # stable signal bench_diff gates on; wall stays informational
@@ -237,7 +259,7 @@ def main(argv=None) -> None:
 
             roofline.main()
         except Exception as e:
-            print(f"# roofline FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+            _LOG.warning("roofline FAILED: %s: %s", type(e).__name__, e)
 
     if not args.no_calibrate:
         n_cal = 100_000 if args.quick else 300_000
@@ -247,7 +269,9 @@ def main(argv=None) -> None:
                   f"reference={c['reference'] / 1e3:.0f}k/s "
                   f"batched={c['batched'] / 1e3:.0f}k/s ({c['speedup']}x, "
                   f"cache hit={c['cache_hit_rate']:.0%} "
-                  f"repair={c['cache_repair_rate']:.0%})")
+                  f"repair={c['cache_repair_rate']:.0%}, "
+                  f"obs conservation="
+                  f"{'ok' if c['obs']['conservation_pass'] else 'FAIL'})")
 
     report["suite_wall_s"] = round(time.time() - t0, 1)
     BENCH_PATH.write_text(json.dumps(report, indent=1))

@@ -67,6 +67,18 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> tuple:
     fgw = fresh.get("grid", {}).get("wall_s", 0.0)
     if bn and fn == bn and bgw >= 1.0 and fgw > bgw * (1.0 + tolerance):
         infos.append(f"grid wall: {fgw:.0f}s vs {bgw:.0f}s (informational)")
+    # latency-provenance summaries ride along with the calibration cells;
+    # obs is an instrumentation layer, never a perf gate (its correctness
+    # contract is enforced by tests/test_obs.py, not by this diff)
+    for cell, c in sorted(fresh.get("engine_reqps", {}).items()):
+        ob = c.get("obs")
+        if ob:
+            infos.append(
+                f"obs {cell}: conservation "
+                f"{'ok' if ob.get('conservation_pass') else 'FAIL'}, "
+                f"{ob.get('n_miss', 0)} reads / {ob.get('n_stall', 0)} "
+                f"stalls attributed, {ob.get('closure_fallbacks', 0)} "
+                f"closure fallbacks (informational)")
     return problems, infos
 
 

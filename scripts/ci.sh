@@ -14,6 +14,7 @@
 #   bash scripts/ci.sh fused      # fused-boundary-engine conflict parity
 #   bash scripts/ci.sh faults     # fault model + crash-recovery suite
 #   bash scripts/ci.sh qos        # die-level QoS: suspend/priority/striping
+#   bash scripts/ci.sh obs        # latency provenance: conservation + export
 #   bash scripts/ci.sh bench      # orchestrator smoke + baseline diff
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -101,13 +102,23 @@ if [[ "$STAGE" == "all" || "$STAGE" == "qos" ]]; then
   python -m pytest -x -q tests/test_qos.py -k "qos or suspend or superblock"
 fi
 
+if [[ "$STAGE" == "all" || "$STAGE" == "obs" ]]; then
+  echo "== latency provenance: conservation + parity + trace export =="
+  # Every scenario's components must sum bit-exactly to the recorded
+  # latencies on both engines, zero-obs configs must attach nothing
+  # (fused engine stays eligible), and the Perfetto export must be
+  # valid, deterministic trace-event JSON.
+  python -m pytest -x -q tests/test_obs.py
+fi
+
 if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then
   echo "== benchmark orchestrator smoke (--quick, auto physical-core jobs) =="
   # Representative sections: fig14 covers the full 7x8 variant grid, fig9
   # covers per-cfg cache keys, gc_tail covers the block-FTL sweep (so the
   # CPU-time gate below sees the flash backend), faults covers the fault
-  # model's scheduler-path cells. --profile prints req/s.
-  python -m benchmarks.run --quick --only fig14,fig9,gc_tail,faults \
+  # model's scheduler-path cells, breakdown covers the obs-enabled grid
+  # (component stacks + conservation column). --profile prints req/s.
+  python -m benchmarks.run --quick --only fig14,fig9,gc_tail,faults,breakdown \
     --skip-roofline --profile
   test -f BENCH_sim.json && echo "BENCH_sim.json written"
   echo "== CPU-time diff vs committed baseline (wall is informational) =="

@@ -309,6 +309,41 @@ class FaultConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Latency-provenance observability knobs (core/obs.py).
+
+    Off by default: the zero-obs config attaches no ObsModel anywhere, so
+    the hot paths pay one ``is not None`` test and the fused engine stays
+    eligible. With ``enabled=True`` every host-visible completion is
+    decomposed into additive latency components (conservation-checked to
+    sum bit-exactly to the engine's latency), per-component log-scale
+    histograms and exact percentiles are kept, a time-window interval
+    ring records storm timelines, and a bounded event ring feeds
+    ``scripts/trace_export.py`` (Chrome/Perfetto trace-event JSON).
+    Obs-active cells are a conflict class like faults/QoS: ``run_fused``
+    refuses them and both engines route flash reads through the one
+    attribution site (``Channels.read`` / ``QosModel.read`` /
+    ``FaultModel.read``). Unlike faults-vs-QoS, obs COMPOSES with either."""
+
+    enabled: bool = False
+    # Interval-metric window width. Windows start at t=0; when a run
+    # outgrows max_windows the width doubles and adjacent windows fold
+    # (deterministic in event order, so both engines agree bit-for-bit).
+    window_ns: float = 1_000_000.0
+    max_windows: int = 256
+    # Bounded event ring (GC windows, suspends, retries, outages,
+    # recovery barriers, bus convoys, compaction drains): oldest events
+    # are dropped beyond the cap.
+    max_events: int = 8192
+    # Slowest-K retired requests kept with their full component vectors
+    # (exported as Perfetto flow events).
+    slow_k: int = 32
+    # A read whose channel-bus wait exceeds this is recorded as a
+    # "convoy" event (4 back-to-back 800ns transfers by default).
+    convoy_ns: float = 3_200.0
+
+
+@dataclass(frozen=True)
 class SimConfig:
     """CXL-SSD simulator parameters. Defaults follow paper Table II scaled by
     `scale` so laptop-scale runs finish quickly (the paper itself scales the
@@ -443,6 +478,13 @@ class SimConfig:
     # the scalar span/quantum paths (fault-affected reads are a conflict
     # class — see DESIGN.md). Knob-by-knob rationale lives on FaultConfig.
     fault: FaultConfig = field(default_factory=FaultConfig)
+    # --- latency provenance / observability (core/obs.py) ---
+    # Default ObsConfig() is fully off. obs.enabled=True attaches an
+    # ObsModel (additive latency-component accounting + interval ring +
+    # event recorder) and routes the batched engine off the fused path
+    # (obs-active cells are a conflict class — see DESIGN.md "Latency
+    # provenance"). Composes with either faults or QoS.
+    obs: ObsConfig = field(default_factory=ObsConfig)
     # --- die-level QoS (core/qos.py; DESIGN.md "Die-level QoS") ---
     # GC suspend/resume: a host read that lands inside a carved
     # [gc_die_from, gc_die_until] window preempts the GC chain instead of
@@ -529,6 +571,24 @@ class SimConfig:
                 "and die-failure remap assume per-die blocks and the "
                 "un-arbitrated timing recipe"
             )
+        if self.obs.enabled:
+            if self.obs.window_ns <= 0.0:
+                raise ValueError(
+                    f"obs.window_ns must be > 0 (got {self.obs.window_ns}); "
+                    "the interval ring indexes windows as t // window_ns"
+                )
+            if self.obs.max_windows < 2 or self.obs.max_windows % 2:
+                raise ValueError(
+                    f"obs.max_windows must be an even count >= 2 (got "
+                    f"{self.obs.max_windows}); overflow folds windows "
+                    "pairwise into half the ring at double the width"
+                )
+            if self.obs.max_events < 0 or self.obs.slow_k < 0:
+                raise ValueError(
+                    "obs.max_events and obs.slow_k are ring capacities and "
+                    f"must be >= 0 (got {self.obs.max_events}, "
+                    f"{self.obs.slow_k})"
+                )
 
     # ----- derived (scaled) quantities -----
     @property

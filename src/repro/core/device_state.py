@@ -140,6 +140,11 @@ class DeviceState:
         "gc_suspends", "gc_resumes", "gc_resume_ns_total",
         "gc_pause_avoided_ns",
         "rp_bypasses", "rp_wait_saved_ns", "qos_die_wait_max_ns",
+        # latency provenance (core/obs.py): attached ObsModel or None.
+        # Lives on the state object so shared-call sites (flash.py GC
+        # carves, simulator compaction) can emit events without a back-
+        # pointer to the Machine; None on every zero-obs run.
+        "obs",
     )
 
     def __init__(self, cfg: SimConfig, page_space: int):
@@ -248,6 +253,7 @@ class DeviceState:
         self.rp_wait_saved_ns = 0.0
         self.qos_die_wait_max_ns = 0.0  # max die backlog seen at QoS'd
         #                                 host-read issue (queue occupancy)
+        self.obs = None               # ObsModel when cfg.obs.enabled
 
     # ---- epoch bumps (called by the ssd.py views and HostLru) ----
     def bump(self, page: int) -> None:

@@ -283,16 +283,19 @@ class BatchedMachine(Machine):
             ds.flash.l2p_mv if ds.flash is not None else None,
             self.ftl.loc_div if ds.flash is not None else 0,
             ds.gc_die_from, ds.gc_die_until,
-            # fault injection / die-level QoS: the bound Channels.read
-            # when a FaultModel or QosModel is attached, else None. Both
-            # are conflict classes — the span routes affected flash reads
-            # through the shared method (retry ladder, outages, scheduled
-            # events; GC suspend/resume, read-priority arbitration)
-            # instead of its inlined timing mirror, so both engines
-            # consume the identical fault stream / arbitration decisions.
+            # fault injection / die-level QoS / latency provenance: the
+            # bound Channels.read when a FaultModel, QosModel or ObsModel
+            # is attached, else None. All three are conflict classes —
+            # the span routes affected flash reads through the shared
+            # method (retry ladder, outages, scheduled events; GC
+            # suspend/resume, read-priority arbitration; per-request
+            # component staging) instead of its inlined timing mirror, so
+            # both engines consume the identical fault stream /
+            # arbitration decisions / attribution stream.
             self.channels.read
             if (self.channels.fault is not None
-                or self.channels.qos is not None) else None,
+                or self.channels.qos is not None
+                or self.channels.obs is not None) else None,
         )
 
     def _columns(self, th: Thread):
@@ -606,6 +609,10 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
     pages, lines, writes, gaps = m._columns(th)
     st = m.stats
     ds = m.state
+    # latency provenance: staged inside the shared Channels.read (obs
+    # forces the f_read dispatch), committed/discarded at the retire
+    # sites below — same protocol as serve() (KEEP IN SYNC)
+    obs = m.channels.obs
     # invariant locals (memoryviews over the shared state arrays, latency
     # constants, inlined-flash-timing constants) come prepacked — see
     # BatchedMachine._span_env. Python-int scalar get/set on a memoryview
@@ -744,6 +751,8 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 if stall > 0.0:  # variable latency: tail-histogram it
                     st.ssd_w_var += 1
                     lat_hist_w[lb(lat)] += 1
+                    if obs is not None:
+                        obs.commit_write_stall(lat, stall, t)
                 lat_sum += lat
                 lat_hit_acc += lat
                 t += lat
@@ -834,6 +843,8 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 st.flash_write_pages += 1
             if ctx_on and est > ctx_thr:
                 st.ctx_switches += 1
+                if obs is not None:
+                    obs.on_park()  # staged read parks: no host retire
                 if promoting:
                     if skybyte_count:
                         c = acc[p] + 1
@@ -872,6 +883,8 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
             lat = (done - t) + base + cache_idx + dram
             miss_n += 1
             lat_hist[lb(lat)] += 1
+            if obs is not None:
+                obs.commit_read_miss(lat)
             lat_sum += lat
             lat_miss_acc += lat
             t += lat
@@ -1033,6 +1046,8 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                             ftl_write)
         if ctx_on and est > ctx_thr:
             st.ctx_switches += 1
+            if obs is not None:
+                obs.on_park()  # staged read parks: no host retire
             if promoting:
                 if skybyte_count:
                     c = acc[p] + 1
@@ -1071,6 +1086,8 @@ def _inline_span(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
         lat = (done - t) + base + cache_idx + dram
         miss_n += 1
         lat_hist[lb(lat)] += 1
+        if obs is not None:
+            obs.commit_read_miss(lat)
         lat_sum += lat
         lat_miss_acc += lat
         t += lat
@@ -1283,9 +1300,12 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                     done = m.channels.read(chb, ddb, t)
                     ev = m.cache.insert(pgb, False)
                     m._handle_evict(ev, t)
+                    obs = m.channels.obs
                     if ctx_on and est > cfg.ctx_threshold_ns:
                         # Algorithm 1 fires: park the thread (§III-A)
                         m.stats.ctx_switches += 1
+                        if obs is not None:
+                            obs.on_park()  # staged read parks: no retire
                         m._maybe_promote(pgb, t)
                         th.ready = done
                         th.replay = True
@@ -1296,6 +1316,8 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                         # same left-to-right addition order as serve()
                         lat = (done - t) + cfg.cxl_protocol_ns \
                             + cfg.cache_index_ns + cfg.ssd_dram_ns
+                        if obs is not None:
+                            obs.commit_read_miss(lat)
                         t += lat
                         _record(m.stats, "miss_flash", lat)
                         i += 1
@@ -1319,6 +1341,9 @@ def batched_quantum(m: BatchedMachine, cfg: SimConfig, th: Thread, t: float,
                 if stall > 0.0:  # variable latency: tail-histogram it
                     m.stats.ssd_w_var += 1
                     m.stats.lat_hist_w[_lat_bin(lat)] += 1
+                    obs = m.channels.obs
+                    if obs is not None:
+                        obs.commit_write_stall(lat, stall, t)
                 t += lat
                 _record(m.stats, "ssd_w", lat)
                 i += 1
@@ -1467,18 +1492,21 @@ def run_fused(m: BatchedMachine, cfg: SimConfig, threads) -> list:
     and dram-only runs (pure vector path) use the plain scheduler around
     batched_quantum directly. Returns the per-core clock list."""
     if (m._inline_only or cfg.dram_only or m.channels.fault is not None
-            or m.channels.qos is not None):
-        # Fault injection and die-level QoS are conflict classes: the
-        # mega-loop's three inlined flash-read sites would bypass the
-        # FaultModel (retry ladders, outages, scheduled power loss / die
-        # failure) and the QosModel (GC suspend/resume, read-priority
-        # arbitration), and a power-loss restart mutates cache/timeline
-        # state out from under the fused loop's hoisted locals. The
-        # scheduler + batched_quantum route every flash read through the
-        # shared Channels.read (the span's miss sites dispatch to it via
-        # _span_env's f_read), so parity with the reference engine holds
-        # with faults or QoS on. Note superblock alone is NOT a conflict:
-        # it changes the loc_div placement divisor, not arbitration.
+            or m.channels.qos is not None
+            or m.channels.obs is not None):
+        # Fault injection, die-level QoS and latency provenance (obs) are
+        # conflict classes: the mega-loop's three inlined flash-read
+        # sites would bypass the FaultModel (retry ladders, outages,
+        # scheduled power loss / die failure), the QosModel (GC
+        # suspend/resume, read-priority arbitration) and the ObsModel's
+        # per-request staging, and a power-loss restart mutates
+        # cache/timeline state out from under the fused loop's hoisted
+        # locals. The scheduler + batched_quantum route every flash read
+        # through the shared Channels.read (the span's miss sites
+        # dispatch to it via _span_env's f_read), so parity with the
+        # reference engine holds with faults, QoS or obs on. Note
+        # superblock alone is NOT a conflict: it changes the loc_div
+        # placement divisor, not arbitration.
         return _run_scheduler(m, cfg, threads, batched_quantum)
     m._threads = threads
     st = m.stats

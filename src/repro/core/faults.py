@@ -123,6 +123,8 @@ class FaultModel:
         chn = self.channels
         die = s.chan_die[ch]
         dv = die[d]
+        o = s.obs
+        booked = 0.0  # GC pause booked on this read (obs chain slot)
         if gc_attr and dv > now:
             gu = s.gc_die_until[ch][d]
             if gu > now:
@@ -133,15 +135,23 @@ class FaultModel:
                 if pause > 0.0:
                     s.gc_stall_events += 1
                     s.gc_pause_ns_total += pause
+                    if o is not None:
+                        o.gc_pause_site += pause  # bit-exact mirror
                     if pause > s.gc_pause_max_ns:
                         s.gc_pause_max_ns = pause
+                    booked = pause
         start = now if now > dv else dv
+        out_ns = 0.0
         if self.outage_rate > 0.0 and \
                 _u01(self.seed, idx, _SALT_OUTAGE) < self.outage_rate:
+            if o is not None:
+                o.on_outage(ch, d, start, start + self.outage_ns)
             start += self.outage_ns
+            out_ns = self.outage_ns
             s.ft_outage_events += 1
             s.ft_outage_ns += self.outage_ns
         sense = chn.read_ns
+        retry_ns = 0.0
         if self.err_rate > 0.0:
             u = _u01(self.seed, idx, _SALT_RETRY)
             if u < self.err_rate:
@@ -154,7 +164,10 @@ class FaultModel:
                 s.ft_retry_steps += retries
                 if u < thr:  # the whole ladder failed: ECC poison
                     s.ft_uncorrectable += 1
-                sense += retries * self.step_ns
+                retry_ns = retries * self.step_ns
+                sense += retry_ns
+                if o is not None:
+                    o.on_retry(ch, d, now, retries)
         sensed = start + sense
         bus = s.chan_bus[ch]
         xfer_start = sensed if sensed > bus else bus
@@ -166,6 +179,25 @@ class FaultModel:
         if self._df_sched and idx in self._df_sched:
             self._df_sched.discard(idx)
             self.ftl.fail_die(now, ch, d)
+            if o is not None:
+                o.on_die_fail(ch, d, now)
+        if o is not None and gc_attr:
+            dw = dv - now  # die backlog at issue (pre-outage wait)
+            if dw < 0.0:
+                dw = 0.0
+            rec = 0.0  # part of the wait behind a power-loss barrier
+            ru = o.rec_until
+            if ru > now:
+                hi = dv if dv < ru else ru
+                rec = hi - now
+                if rec < 0.0:
+                    rec = 0.0
+            queue = dw - booked - rec
+            if queue < 0.0:
+                queue = 0.0
+            o.stage_read(ch, d, now, dw, queue, booked, 0.0, rec,
+                         out_ns, chn.read_ns, retry_ns,
+                         xfer_start - sensed, TRANSFER_NS, done)
         return done
 
     # ---- power loss + crash-consistent restart ----
@@ -253,3 +285,6 @@ class FaultModel:
         s.ft_recovery_ns_total += dt
         if dt > s.ft_recovery_ns_max:
             s.ft_recovery_ns_max = dt
+        o = s.obs
+        if o is not None:  # barrier event + recovery attribution horizon
+            o.on_recovery(now, end)

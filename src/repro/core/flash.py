@@ -334,6 +334,9 @@ class BlockFtl:
         die[d] = (xfer_end if xfer_end > dv else dv) + self.program_ns
         s.chan_busy_ns += TRANSFER_NS + self.program_ns / DIES_PER_CHANNEL
         s.flash_writes += 1
+        o = s.obs
+        if o is not None:
+            o.on_program(now)
         if old >= 0:  # invalidate the stale physical copy
             pvalid[old] = False
             nv = bvalid[ob] - 1
@@ -483,6 +486,9 @@ class BlockFtl:
             s.gc_susp_left[ch][d] = self.susp_max
             s.gc_windows += 1
         s.gc_die_until[ch][d] = die[d]
+        o = s.obs
+        if o is not None:  # victim erase + read-out slice
+            o.on_gc_window(ch, d, start, die[d])
         bus = s.chan_bus[ch]
         s.chan_bus[ch] = (now if now > bus else bus) \
             + n_live * TRANSFER_NS
@@ -581,6 +587,8 @@ class BlockFtl:
                 die2[d2] = dv2
                 gu_row[d2] = gu
                 gdf[ch2][d2] = gf
+                if o is not None:  # migration-program slice (one segment)
+                    o.on_gc_window(ch2, d2, st2, dv2)
                 fs.blk_valid_mv[b2] += seg
                 x += seg
                 slot += seg
@@ -606,6 +614,8 @@ class BlockFtl:
                         if vh is not None:
                             heappush(vh, (fs.blk_valid_mv[b], b))
                         s.gc_migrated_pages += x
+                        if o is not None:
+                            o.on_gc_migrated(now, x)
                         return False
                     fs.blk_state_mv[nb] = 1
                     fs.blk_gc_mv[nb] = True  # GC-written data: never "hot"
@@ -615,6 +625,8 @@ class BlockFtl:
                     fs.gc_slot = slot
             s.chan_busy_ns = busy
         s.gc_migrated_pages += n_live
+        if o is not None:
+            o.on_gc_migrated(now, n_live)
         # erase the victim back into the pool
         fs.pvalid[base:base + ppb] = False
         fs.blk_valid_mv[b] = 0
@@ -674,6 +686,7 @@ class BlockFtl:
             loc = (pp % n_ch, (pp // n_ch) % DIES_PER_CHANNEL)
             die_live[loc] += 1
             chan_xfer[loc[0]] = chan_xfer.get(loc[0], 0) + 1
+        o = s.obs
         for (ch, d), nl in die_live.items():
             die = s.chan_die[ch]
             dv = die[d]
@@ -684,6 +697,8 @@ class BlockFtl:
                 s.gc_susp_left[ch][d] = susp_max
                 s.gc_windows += 1
             s.gc_die_until[ch][d] = die[d]
+            if o is not None:  # shallow per-die erase/read-out slice
+                o.on_gc_window(ch, d, start, die[d])
             s.chan_busy_ns += erase_ns / DIES_PER_CHANNEL \
                 + nl * (read_ns / DIES_PER_CHANNEL)
         for ch, nx in chan_xfer.items():
@@ -723,6 +738,8 @@ class BlockFtl:
                     s.gc_susp_left[ch2][d2] = susp_max
                     s.gc_windows += 1
                 s.gc_die_until[ch2][d2] = dv2
+                if o is not None:  # per-page stripe program: too fine
+                    o.on_gc_busy(st2, dv2 - st2)  # for the event ring
                 s.chan_busy_ns += busy_inc
                 l2p[lp] = pp2
                 p2l[pp2] = lp
@@ -750,6 +767,8 @@ class BlockFtl:
                         if vh is not None:
                             heappush(vh, (bvalid[b], b))
                         s.gc_migrated_pages += x
+                        if o is not None:
+                            o.on_gc_migrated(now, x)
                         return False
                     fs.blk_state_mv[nb] = 1
                     fs.blk_gc_mv[nb] = True  # GC-written data: never "hot"
@@ -758,6 +777,8 @@ class BlockFtl:
                 else:
                     fs.gc_slot = slot
         s.gc_migrated_pages += n_live
+        if o is not None:
+            o.on_gc_migrated(now, n_live)
         # erase the victim back into the pool
         fs.pvalid[base:base + ppb] = False
         fs.blk_valid_mv[b] = 0

@@ -1,0 +1,584 @@
+"""Latency provenance — additive per-request breakdown, interval
+timelines, and a bounded device-event recorder (``SimConfig.obs``).
+
+Opt-in observability layer over the replay engines. When attached
+(``cfg.obs.enabled``) every host-visible completion is decomposed into
+additive components — CXL port transit, die queue wait, channel-bus
+transfer wait, flash sense, GC pause (carved window vs suspend/resume
+penalty), fault retry-ladder time, recovery barrier, outage wait,
+index/DRAM constants — under a *conservation contract*: the components
+of each request sum bit-exactly (left-to-right IEEE-754 addition) to
+the latency the engine recorded for that request.
+
+Exactness scheme. Timestamps are arbitrary doubles (float32 trace gaps
+accumulated in float64), so a naive decomposition into independently
+rounded timestamp differences misses the recorded latency by ulps:
+``fl(a + fl(b - a)) == b`` holds only under Sterbenz conditions. Every
+request chain therefore keeps one *closure slot* — the die-queue wait,
+the only component that is itself defined as a residual — and a
+verify-and-nudge loop adds the rounding residue (lat - chain_sum) into
+it until the left-to-right chain sum reproduces the recorded latency
+bit-exactly (<= 2 iterations in practice). A guaranteed-terminating
+fallback collapses the whole chain into the closure slot (x + 0.0 == x
+makes that sum exact by construction) and is counted in
+``closure_fallbacks``; a ``violations`` counter records any request
+whose final chain still missed — structurally impossible, asserted
+zero in tests/test_obs.py.
+
+Conflict-class contract (KEEP IN SYNC with qos.py / faults.py and the
+engine's mirrored sites): obs-active cells refuse ``run_fused`` and run
+through ``batched_quantum`` / the reference loop. Every gc-attributed
+flash read *stages* its device-side components inside the ONE read
+dispatch both engines share (``Channels.read`` or the attached
+``QosModel.read`` / ``FaultModel.read``); the engines add only
+commit/park calls at their existing retire sites. Both engines retire
+the same requests in the same global order, so every obs artifact
+(per-event chains, totals, interval windows, events, slowest-K) is
+bit-identical across engines. Zero-obs configs construct nothing and
+pay one ``is not None`` test per site.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.configs.base import SimConfig
+from repro.core.device_state import DIES_PER_CHANNEL
+from repro.core.simulator import (_LAT_NBINS, _lat_bin, _lat_bin_edge,
+                                  percentiles_from_items)
+
+# Flash-read chain slot order. The closure slot (queue) comes first; the
+# three constant tail slots close the chain on the engine's recorded
+# latency, so a read miss decomposes without referencing the engine's
+# own expression shape.
+_CHAIN = ("queue", "gc_pause", "gc_suspend", "recovery", "outage",
+          "sense", "retry", "bus_wait", "transfer")
+_NCH = len(_CHAIN)
+_RCHAIN = _CHAIN + ("cxl", "cache_index", "ssd_dram")
+_NR = len(_RCHAIN)
+# Write-slot-stall chain (Base-CSSD posted-write backpressure); wstall
+# is the closure slot.
+_WCHAIN = ("wstall", "cxl", "cache_index", "ssd_dram")
+
+# Perfetto synthetic track ids (see to_perfetto docstring)
+_PID_DEVICE = 999     # device-global: recovery barriers, compactions
+_PID_SLOW = 1000      # slowest-K request slices
+_TID_BUS = 998        # per-channel bus track (transfer convoys)
+
+
+class ObsModel:
+    """Per-run latency-provenance recorder; one per Machine when
+    ``cfg.obs.enabled`` (see the module docstring for the contract)."""
+
+    __slots__ = (
+        "cfg", "knobs",
+        # config constants (locals of every commit)
+        "cxl", "cache_ix", "log_ix", "dram", "host_dram", "w_index_log",
+        # recovery-barrier horizon (set by FaultModel._power_loss)
+        "rec_until",
+        # staged flash read awaiting its engine retire site
+        "s_ch", "s_d", "s_now", "s_done", "s_parts",
+        # per-component accounting
+        "tot", "hist", "hist_w", "n_miss", "n_stall",
+        "checked", "violations", "closure_fallbacks", "gc_pause_site",
+        # interval ring
+        "window_ns", "folds", "max_idx",
+        "win_reads", "win_stall", "win_programs", "win_gc_migrated",
+        "win_gc_pause", "win_gc_busy", "win_qmax",
+        "win_miss_h", "win_stall_h",
+        # event recorder + slowest-K heap
+        "events", "ev_emitted", "slow", "slow_seq",
+    )
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        oc = cfg.obs
+        self.knobs = oc
+        self.cxl = cfg.cxl_protocol_ns
+        self.cache_ix = cfg.cache_index_ns
+        self.log_ix = cfg.log_index_ns
+        self.dram = cfg.ssd_dram_ns
+        self.host_dram = cfg.host_dram_ns
+        self.w_index_log = cfg.enable_write_log  # const-write index class
+        self.rec_until = 0.0
+        self.s_ch = 0
+        self.s_d = 0
+        self.s_now = 0.0
+        self.s_done = 0.0
+        self.s_parts = [0.0] * _NR
+        self.tot = {name: 0.0 for name in _RCHAIN}
+        for name in ("wstall", "log_index", "host_dram"):
+            self.tot[name] = 0.0
+        self.hist = {name: np.zeros(_LAT_NBINS, np.int64) for name in _CHAIN}
+        self.hist_w = np.zeros(_LAT_NBINS, np.int64)
+        self.n_miss = 0
+        self.n_stall = 0
+        self.checked = 0
+        self.violations = 0
+        self.closure_fallbacks = 0
+        self.gc_pause_site = 0.0
+        mw = oc.max_windows
+        self.window_ns = oc.window_ns
+        self.folds = 0
+        self.max_idx = -1
+        self.win_reads = np.zeros(mw, np.int64)
+        self.win_stall = np.zeros(mw, np.int64)
+        self.win_programs = np.zeros(mw, np.int64)
+        self.win_gc_migrated = np.zeros(mw, np.int64)
+        self.win_gc_pause = np.zeros(mw, np.float64)
+        self.win_gc_busy = np.zeros(mw, np.float64)
+        self.win_qmax = np.zeros(mw, np.float64)
+        self.win_miss_h = np.zeros((mw, _LAT_NBINS), np.int64)
+        self.win_stall_h = np.zeros((mw, _LAT_NBINS), np.int64)
+        self.events: deque = deque(maxlen=oc.max_events)
+        self.ev_emitted = 0
+        self.slow: List[tuple] = []
+        self.slow_seq = 0
+
+    # ---- interval ring -------------------------------------------------
+    def _widx(self, now: float) -> int:
+        """Window index of ``now``; folds the ring on overflow."""
+        i = int(now // self.window_ns)
+        while i >= len(self.win_reads):
+            self._fold()
+            i = int(now // self.window_ns)
+        if i > self.max_idx:
+            self.max_idx = i
+        return i
+
+    def _fold(self) -> None:
+        """Pairwise-fold the ring into half the windows at double the
+        width. Pure sums/maxes over fixed pairs — the folded state is
+        independent of arrival order within a window, and the fold
+        *trigger* depends only on the event sequence, which is identical
+        across engines, so interval parity stays structural."""
+        mw = len(self.win_reads)
+        h = mw // 2
+        for a in (self.win_reads, self.win_stall, self.win_programs,
+                  self.win_gc_migrated, self.win_gc_pause, self.win_gc_busy):
+            a[:h] = a[0::2] + a[1::2]
+            a[h:] = 0
+        q = self.win_qmax
+        q[:h] = np.maximum(q[0::2], q[1::2])
+        q[h:] = 0.0
+        for hh in (self.win_miss_h, self.win_stall_h):
+            hh[:h] = hh[0::2] + hh[1::2]
+            hh[h:] = 0
+        self.window_ns *= 2.0
+        self.folds += 1
+        self.max_idx //= 2
+
+    # ---- device-side capture -------------------------------------------
+    def stage_read(self, ch: int, d: int, now: float, die_wait: float,
+                   queue: float, gc_pause: float, gc_suspend: float,
+                   recovery: float, outage: float, sense: float,
+                   retry: float, bus_wait: float, transfer: float,
+                   done: float) -> None:
+        """Record a gc-attributed flash read's device-side component
+        estimates (called from the one read dispatch both engines
+        share). The engine's retire site either commits the stage
+        (``commit_read_miss``) or drops it (``on_park``). The split
+        estimates need not be exact — the closure slot absorbs rounding
+        at commit — but each is the very float the device model
+        computed, so e.g. the gc_pause slot matches the pause booked
+        into ``gc_pause_ns_total`` bit-exactly."""
+        self.s_ch = ch
+        self.s_d = d
+        self.s_now = now
+        self.s_done = done
+        p = self.s_parts
+        p[0] = queue
+        p[1] = gc_pause
+        p[2] = gc_suspend
+        p[3] = recovery
+        p[4] = outage
+        p[5] = sense
+        p[6] = retry
+        p[7] = bus_wait
+        p[8] = transfer
+        p[9] = self.cxl
+        p[10] = self.cache_ix
+        p[11] = self.dram
+        i = self._widx(now)
+        self.win_reads[i] += 1
+        if die_wait > self.win_qmax[i]:
+            self.win_qmax[i] = die_wait
+        self.win_gc_pause[i] += gc_pause + gc_suspend
+        if bus_wait > self.knobs.convoy_ns:
+            t1 = done - transfer
+            self._emit({"kind": "convoy", "ch": ch, "d": d,
+                        "t0_ns": t1 - bus_wait, "t1_ns": t1})
+
+    def mirror_gc_pause(self, pause: float) -> None:
+        """Bit-exact mirror of the device's ``gc_pause_ns_total``
+        accumulation: called adjacent to every booking site with the
+        same float, in the same order — ``gc_pause_site`` must end equal
+        (==, not isclose) to ``ds.gc_pause_ns_total``."""
+        self.gc_pause_site += pause
+
+    # ---- engine retire sites -------------------------------------------
+    def _close(self, p: List[float], lat: float, n: int) -> None:
+        """Nudge the closure slot p[0] until the left-to-right sum of
+        p[:n] reproduces ``lat`` bit-exactly; collapse on the (counted)
+        pathological miss."""
+        ok = False
+        for _ in range(5):
+            s = 0.0
+            for k in range(n):
+                s = s + p[k]
+            if s == lat:
+                ok = True
+                break
+            p[0] += lat - s
+        if not ok:
+            for k in range(n):
+                p[k] = 0.0
+            p[0] = lat
+            self.closure_fallbacks += 1
+        self.checked += 1
+        s = 0.0
+        for k in range(n):  # defensive re-verify; structurally always ==
+            s = s + p[k]
+        if s != lat:
+            self.violations += 1
+
+    def commit_read_miss(self, lat: float) -> None:
+        """Retire the staged flash read against the engine's recorded
+        miss latency (KEEP IN SYNC: serve(), _inline_span and
+        batched_quantum call this at their read-miss retire sites)."""
+        p = self.s_parts
+        self._close(p, lat, _NR)
+        tot = self.tot
+        hist = self.hist
+        for k in range(_NCH):
+            v = p[k]
+            tot[_CHAIN[k]] += v
+            hist[_CHAIN[k]][_lat_bin(v)] += 1
+        tot["cxl"] += p[9]
+        tot["cache_index"] += p[10]
+        tot["ssd_dram"] += p[11]
+        self.n_miss += 1
+        self.win_miss_h[self._widx(self.s_now), _lat_bin(lat)] += 1
+        k = self.knobs.slow_k
+        if k > 0:
+            self.slow_seq += 1
+            rec = (lat, self.slow_seq, self.s_ch, self.s_d,
+                   self.s_now, self.s_done, tuple(p))
+            if len(self.slow) < k:
+                heapq.heappush(self.slow, rec)
+            elif rec > self.slow[0]:
+                heapq.heapreplace(self.slow, rec)
+
+    def commit_write_stall(self, lat: float, stall: float,
+                           now: float) -> None:
+        """Retire one MSHR-stalled posted write (Base-CSSD write miss
+        with all slots occupied; the only variable-latency write)."""
+        p = [stall, self.cxl, self.cache_ix, self.dram]
+        self._close(p, lat, 4)
+        tot = self.tot
+        tot["wstall"] += p[0]
+        tot["cxl"] += p[1]
+        tot["cache_index"] += p[2]
+        tot["ssd_dram"] += p[3]
+        self.hist_w[_lat_bin(p[0])] += 1
+        self.n_stall += 1
+        i = self._widx(now)
+        self.win_stall[i] += 1
+        self.win_stall_h[i, _lat_bin(lat)] += 1
+
+    def on_park(self) -> None:
+        """Coordinated context switch fired: the blocked access is
+        squashed (excluded from AMAT) and replayed later as a constant
+        SSD-DRAM hit, so the staged read never retires. Device-side
+        facts (interval reads, convoy events, the gc-pause mirror) were
+        already booked at stage time and stand."""
+        # nothing to drop explicitly: the next stage_read overwrites the
+        # slots, and only commit_read_miss consumes them
+        return
+
+    # ---- device event hooks --------------------------------------------
+    def _emit(self, ev: Dict[str, Any]) -> None:
+        self.ev_emitted += 1
+        self.events.append(ev)  # deque(maxlen) drops the oldest
+
+    def on_gc_window(self, ch: int, d: int, t0: float, t1: float) -> None:
+        """A new GC busy window carved on (ch, d) — every carve site in
+        flash.py / ssd.py reports here (shared calls: both engines)."""
+        self.win_gc_busy[self._widx(t0)] += t1 - t0
+        self._emit({"kind": "gc_window", "ch": ch, "d": d,
+                    "t0_ns": t0, "t1_ns": t1})
+
+    def on_gc_busy(self, t0: float, dur: float) -> None:
+        """GC die occupancy too fine-grained for the event ring (e.g.
+        per-page stripe programs under superblock GC): interval
+        accounting only, no event slice."""
+        self.win_gc_busy[self._widx(t0)] += dur
+
+    def on_gc_migrated(self, now: float, pages: int) -> None:
+        self.win_gc_migrated[self._widx(now)] += pages
+
+    def on_program(self, now: float) -> None:
+        """One host/GC-independent flash program issued (window WAF)."""
+        self.win_programs[self._widx(now)] += 1
+
+    def on_suspend(self, ch: int, d: int, t0: float, t1: float) -> None:
+        self._emit({"kind": "suspend", "ch": ch, "d": d,
+                    "t0_ns": t0, "t1_ns": t1})
+
+    def on_retry(self, ch: int, d: int, now: float, steps: int) -> None:
+        self._emit({"kind": "retry", "ch": ch, "d": d,
+                    "t0_ns": now, "steps": steps})
+
+    def on_outage(self, ch: int, d: int, t0: float, t1: float) -> None:
+        self._emit({"kind": "outage", "ch": ch, "d": d,
+                    "t0_ns": t0, "t1_ns": t1})
+
+    def on_recovery(self, t0: float, t1: float) -> None:
+        """Power-loss recovery barrier: all timelines pushed to t1;
+        subsequent die waits up to t1 are attributed to recovery."""
+        self.rec_until = t1
+        self._emit({"kind": "recovery", "t0_ns": t0, "t1_ns": t1})
+
+    def on_compaction(self, now: float, pages: int) -> None:
+        self._emit({"kind": "compaction", "t0_ns": now, "pages": pages})
+
+    def on_die_fail(self, ch: int, d: int, now: float) -> None:
+        self._emit({"kind": "die_fail", "ch": ch, "d": d, "t0_ns": now})
+
+    # ---- summary --------------------------------------------------------
+    def finalize(self, st, ds) -> Dict[str, Any]:
+        """Fold the captured provenance into one JSON-safe summary block
+        (exported as ``out["obs"]`` by simulate()).
+
+        The per-event conservation contract is what is bit-exact; the
+        component *totals* additionally fold in the constant-latency
+        request classes (host hits, log/cache hits, constant posted
+        writes) derived from the Stats counters as count x constant —
+        no per-event hooks ever run on a hit path, so the vector fast
+        path stays untouched."""
+        cfg = self.cfg
+        nm = self.n_miss
+        ns = self.n_stall
+        comps: Dict[str, Any] = {}
+        for name in _CHAIN:
+            h = self.hist[name]
+            items = [(_lat_bin_edge(b), int(c))
+                     for b, c in enumerate(h.tolist()) if c]
+            p50, p95, p99 = percentiles_from_items(items, nm)
+            comps[name] = {"total_ns": float(self.tot[name]), "n": nm,
+                           "p50_ns": p50, "p95_ns": p95, "p99_ns": p99}
+        items = [(_lat_bin_edge(b), int(c))
+                 for b, c in enumerate(self.hist_w.tolist()) if c]
+        p50, p95, p99 = percentiles_from_items(items, ns)
+        comps["wstall"] = {"total_ns": float(self.tot["wstall"]), "n": ns,
+                           "p50_ns": p50, "p95_ns": p95, "p99_ns": p99}
+        # constant classes (derived; totals only — their percentile IS
+        # the constant)
+        w_const = st.ssd_w - st.ssd_w_var
+        host = st.host_r + st.host_w
+        w_ix = self.log_ix if self.w_index_log else self.cache_ix
+        tot_cxl = self.tot["cxl"] \
+            + self.cxl * (st.hit_log + st.hit_cache + w_const)
+        tot_dram = self.tot["ssd_dram"] \
+            + self.dram * (st.hit_log + st.hit_cache + w_const)
+        tot_cix = self.tot["cache_index"] + self.cache_ix * st.hit_cache \
+            + (0.0 if self.w_index_log else self.cache_ix * w_const)
+        tot_lix = self.log_ix * st.hit_log \
+            + (self.log_ix * w_const if self.w_index_log else 0.0)
+        n_ssd = st.hit_log + st.hit_cache + w_const + ns + nm
+        comps["cxl"] = {"total_ns": float(tot_cxl), "n": n_ssd,
+                        "per_event_ns": self.cxl}
+        comps["ssd_dram"] = {"total_ns": float(tot_dram), "n": n_ssd,
+                             "per_event_ns": self.dram}
+        comps["cache_index"] = {"total_ns": float(tot_cix),
+                                "per_event_ns": self.cache_ix}
+        comps["log_index"] = {"total_ns": float(tot_lix),
+                              "per_event_ns": self.log_ix}
+        comps["host_dram"] = {"total_ns": float(self.host_dram * host),
+                              "n": host, "per_event_ns": self.host_dram}
+        site = float(self.gc_pause_site)
+        dev = float(ds.gc_pause_ns_total)
+        conservation = {
+            "checked": int(self.checked),
+            "violations": int(self.violations),
+            "closure_fallbacks": int(self.closure_fallbacks),
+            "gc_pause_site_ns": site,
+            "gc_pause_device_ns": dev,
+            "gc_pause_exact": site == dev,
+            "pass": self.violations == 0 and site == dev,
+        }
+        windows = []
+        for i in range(self.max_idx + 1):
+            mh = self.win_miss_h[i]
+            tm = int(mh.sum())
+            r99 = percentiles_from_items(
+                [(_lat_bin_edge(b), int(c))
+                 for b, c in enumerate(mh.tolist()) if c], tm, (0.99,))[0]
+            sh = self.win_stall_h[i]
+            tw = int(sh.sum())
+            w99 = percentiles_from_items(
+                [(_lat_bin_edge(b), int(c))
+                 for b, c in enumerate(sh.tolist()) if c], tw, (0.99,))[0]
+            prog = int(self.win_programs[i])
+            mig = int(self.win_gc_migrated[i])
+            windows.append({
+                "t0_ns": i * self.window_ns,
+                "reads": int(self.win_reads[i]), "misses": tm,
+                "read_p99_ns": r99,
+                "stalls": int(self.win_stall[i]), "write_p99_ns": w99,
+                "gc_pause_ns": float(self.win_gc_pause[i]),
+                "gc_busy_ns": float(self.win_gc_busy[i]),
+                "gc_migrated": mig, "programs": prog,
+                "waf": (prog + mig) / prog if prog else 1.0,
+                "queue_max_ns": float(self.win_qmax[i]),
+            })
+        slowest = []
+        for lat, seq, ch, d, t0, t1, parts in sorted(self.slow,
+                                                     reverse=True):
+            slowest.append({
+                "lat_ns": float(lat), "seq": int(seq),
+                "ch": int(ch), "d": int(d),
+                "t0_ns": float(t0), "t1_ns": float(t1),
+                "parts": {name: float(parts[k])
+                          for k, name in enumerate(_RCHAIN)},
+            })
+        return {
+            "meta": {
+                "n_channels": cfg.n_channels,
+                "dies_per_channel": DIES_PER_CHANNEL,
+                "window_ns": self.window_ns,
+                "folds": self.folds,
+            },
+            "n_miss": nm,
+            "n_stall": ns,
+            "components": comps,
+            "conservation": conservation,
+            "intervals": {
+                "window_ns": self.window_ns,
+                "folds": self.folds,
+                "n_windows": self.max_idx + 1,
+                "windows": windows,
+            },
+            "events": {
+                "emitted": self.ev_emitted,
+                "dropped": self.ev_emitted - len(self.events),
+                "list": list(self.events),
+            },
+            "slowest": slowest,
+        }
+
+
+def to_perfetto(block: Dict[str, Any],
+                title: str = "skybyte") -> Dict[str, Any]:
+    """Convert one finalized obs summary block (simulate()'s
+    ``out["obs"]``) into Chrome/Perfetto trace-event JSON — the dict
+    serializes to a file https://ui.perfetto.dev loads directly.
+
+    Track schema:
+      pid = channel        one process per flash channel
+        tid = die            X (complete) slices: carved GC windows,
+                             suspends, outages; i (instant) marks:
+                             fault retries, die failures
+        tid = 998 ("bus")    X slices: channel-bus transfer convoys
+      pid = 999 ("device")   device-global: power-loss recovery
+                             barriers (X), log compactions (instant)
+      pid = 1000 ("slowest") slowest-K requests, one X slice per rank,
+                             tied to the serving die by an s/f flow
+                             arrow; args carry the full component chain
+
+    ``ts``/``dur`` are microseconds per the trace-event spec (the
+    simulator's nanoseconds / 1e3); ``displayTimeUnit`` is "ns".
+    """
+    ev: List[Dict[str, Any]] = []
+    meta = block.get("meta", {})
+    nch = int(meta.get("n_channels", 0))
+    used_pids = {}
+
+    def _proc(pid: int, name: str) -> None:
+        if pid not in used_pids:
+            used_pids[pid] = True
+            ev.append({"ph": "M", "pid": pid, "name": "process_name",
+                       "args": {"name": name}})
+
+    def _thread(pid: int, tid: int, name: str) -> None:
+        key = (pid, tid)
+        if key not in used_pids:
+            used_pids[key] = True
+            ev.append({"ph": "M", "pid": pid, "tid": tid,
+                       "name": "thread_name", "args": {"name": name}})
+
+    for ch in range(nch):
+        _proc(ch, f"channel {ch}")
+    _proc(_PID_DEVICE, "device")
+    _proc(_PID_SLOW, "slowest requests")
+
+    for e in block.get("events", {}).get("list", []):
+        kind = e["kind"]
+        if kind in ("gc_window", "suspend", "outage"):
+            ch, d = e["ch"], e["d"]
+            _proc(ch, f"channel {ch}")
+            _thread(ch, d, f"die {d}")
+            ev.append({"ph": "X", "pid": ch, "tid": d, "name": kind,
+                       "cat": "gc" if kind != "outage" else "fault",
+                       "ts": e["t0_ns"] / 1e3,
+                       "dur": max(e["t1_ns"] - e["t0_ns"], 0.0) / 1e3})
+        elif kind == "convoy":
+            ch = e["ch"]
+            _proc(ch, f"channel {ch}")
+            _thread(ch, _TID_BUS, "bus")
+            ev.append({"ph": "X", "pid": ch, "tid": _TID_BUS,
+                       "name": "convoy", "cat": "bus",
+                       "ts": e["t0_ns"] / 1e3,
+                       "dur": max(e["t1_ns"] - e["t0_ns"], 0.0) / 1e3,
+                       "args": {"die": e["d"]}})
+        elif kind == "recovery":
+            ev.append({"ph": "X", "pid": _PID_DEVICE, "tid": 0,
+                       "name": "recovery", "cat": "fault",
+                       "ts": e["t0_ns"] / 1e3,
+                       "dur": max(e["t1_ns"] - e["t0_ns"], 0.0) / 1e3})
+        elif kind == "compaction":
+            ev.append({"ph": "i", "pid": _PID_DEVICE, "tid": 1, "s": "p",
+                       "name": "compaction", "cat": "log",
+                       "ts": e["t0_ns"] / 1e3,
+                       "args": {"pages": e["pages"]}})
+        elif kind == "retry":
+            ch, d = e["ch"], e["d"]
+            _proc(ch, f"channel {ch}")
+            _thread(ch, d, f"die {d}")
+            ev.append({"ph": "i", "pid": ch, "tid": d, "s": "t",
+                       "name": "retry", "cat": "fault",
+                       "ts": e["t0_ns"] / 1e3,
+                       "args": {"steps": e["steps"]}})
+        elif kind == "die_fail":
+            ch, d = e["ch"], e["d"]
+            _proc(ch, f"channel {ch}")
+            _thread(ch, d, f"die {d}")
+            ev.append({"ph": "i", "pid": ch, "tid": d, "s": "g",
+                       "name": "die_fail", "cat": "fault",
+                       "ts": e["t0_ns"] / 1e3})
+
+    _thread(_PID_DEVICE, 0, "recovery")
+    _thread(_PID_DEVICE, 1, "compaction")
+    for rank, r in enumerate(block.get("slowest", [])):
+        ch, d = r["ch"], r["d"]
+        _proc(ch, f"channel {ch}")
+        _thread(ch, d, f"die {d}")
+        _thread(_PID_SLOW, rank, f"#{rank}")
+        t0us = r["t0_ns"] / 1e3
+        ev.append({"ph": "X", "pid": _PID_SLOW, "tid": rank,
+                   "name": f"slow#{rank} {r['lat_ns']:.0f}ns",
+                   "cat": "slow", "ts": t0us,
+                   "dur": max(r["t1_ns"] - r["t0_ns"], 0.0) / 1e3,
+                   "args": dict(r["parts"])})
+        fid = int(r["seq"])
+        ev.append({"ph": "s", "pid": _PID_SLOW, "tid": rank,
+                   "name": "served_by", "cat": "slow",
+                   "id": fid, "ts": t0us})
+        ev.append({"ph": "f", "bp": "e", "pid": ch, "tid": d,
+                   "name": "served_by", "cat": "slow",
+                   "id": fid, "ts": r["t1_ns"] / 1e3})
+    return {"traceEvents": ev, "displayTimeUnit": "ns",
+            "otherData": {"title": title}}

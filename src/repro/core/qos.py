@@ -80,6 +80,7 @@ class QosModel:
         die = s.chan_die[ch]
         dv = die[d]
         rp = self.rp and gc_attr
+        booked = 0.0  # GC pause booked on this read (obs chain slot)
         if gc_attr and dv > now:
             wait = dv - now
             # per-die queue-occupancy telemetry: max backlog a host read
@@ -102,6 +103,10 @@ class QosModel:
                     s.gc_pause_ns_total += pause
                     if pause > s.gc_pause_max_ns:
                         s.gc_pause_max_ns = pause
+                    o = s.obs
+                    if o is not None:
+                        o.gc_pause_site += pause  # bit-exact mirror
+                    booked = pause
             elif rp and wait > self.rp_cap:
                 # --- read-priority DIE bypass (no GC window on this die:
                 # windows belong to the suspend mechanism). The read is
@@ -115,11 +120,30 @@ class QosModel:
                 die[d] = nd if nd > sensed else sensed
                 s.rp_bypasses += 1
                 s.rp_wait_saved_ns += wait - self.rp_cap
-                return self._xfer(ch, sensed, rp)
+                done = self._xfer(ch, sensed, rp)
+                o = s.obs
+                if o is not None:
+                    bw = (done - sensed) - TRANSFER_NS
+                    o.stage_read(ch, d, now, wait, self.rp_cap, 0.0,
+                                 0.0, 0.0, 0.0, read_ns, 0.0,
+                                 bw if bw > 0.0 else 0.0,
+                                 TRANSFER_NS, done)
+                return done
         start = now if now > dv else dv
         sensed = start + read_ns
         die[d] = sensed
-        return self._xfer(ch, sensed, rp)
+        done = self._xfer(ch, sensed, rp)
+        if gc_attr:
+            o = s.obs
+            if o is not None:
+                die_wait = start - now
+                queue = die_wait - booked
+                bw = (done - sensed) - TRANSFER_NS
+                o.stage_read(ch, d, now, die_wait,
+                             queue if queue > 0.0 else 0.0, booked, 0.0,
+                             0.0, 0.0, read_ns, 0.0,
+                             bw if bw > 0.0 else 0.0, TRANSFER_NS, done)
+        return done
 
     def _xfer(self, ch: int, sensed: float, rp: bool) -> float:
         """Channel-bus stage of a read. Without read priority this IS
@@ -179,4 +203,15 @@ class QosModel:
         s.gc_pause_ns_total += suspend_ns
         if suspend_ns > s.gc_pause_max_ns:
             s.gc_pause_max_ns = suspend_ns
-        return self._xfer(ch, sensed, self.rp)
+        done = self._xfer(ch, sensed, self.rp)
+        o = s.obs
+        if o is not None:
+            o.gc_pause_site += suspend_ns  # bit-exact mirror (booked above)
+            o.on_suspend(ch, d, now, start)
+            bw = (done - sensed) - TRANSFER_NS
+            # the residual suspend_ns the read waited is GC-induced: it
+            # goes to the gc_suspend chain slot, not the queue slot
+            o.stage_read(ch, d, now, dv - now, 0.0, 0.0, suspend_ns,
+                         0.0, 0.0, read_ns, 0.0,
+                         bw if bw > 0.0 else 0.0, TRANSFER_NS, done)
+        return done

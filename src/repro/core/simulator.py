@@ -93,6 +93,34 @@ def _lat_bin_edge(b: int) -> float:
     return float((1 << e) + ((b & 7) << (e - 3)))
 
 
+def percentiles_from_items(items, total: int,
+                           qs=(0.50, 0.95, 0.99)) -> List[float]:
+    """Exact percentiles over a (value, count) multiset.
+
+    The one shared walk behind lat_p* / lat_read_p* and every
+    per-component percentile in core/obs.py (figure modules consume the
+    exported fields rather than re-deriving bins locally). rank =
+    max(ceil(q*total), 1) over the value-sorted multiset — duplicate
+    constant-latency entries merge under the sort, so the result is
+    bit-identical to the historical inline loop in Stats.finalize."""
+    srt = sorted(it for it in items if it[1] > 0)
+    out: List[float] = []
+    for q in qs:
+        if not total:
+            out.append(0.0)
+            continue
+        rank = max(int(np.ceil(q * total)), 1)
+        cum = 0
+        val = srt[-1][0] if srt else 0.0
+        for v, c in srt:
+            cum += c
+            if cum >= rank:
+                val = v
+                break
+        out.append(float(val))
+    return out
+
+
 class Stats:
     __slots__ = (
         "n", "host_r", "host_w", "hit_log", "hit_cache", "miss_flash", "ssd_w",
@@ -213,20 +241,9 @@ class Stats:
             (("lat_read_p50_ns", "lat_read_p95_ns", "lat_read_p99_ns"),
              r_items, n_reads),
         ):
-            srt = sorted(it for it in items if it[1] > 0)
-            for field, q in zip(fields, (0.50, 0.95, 0.99)):
-                if not total:
-                    setattr(self, field, 0.0)
-                    continue
-                rank = max(int(np.ceil(q * total)), 1)
-                cum = 0
-                val = srt[-1][0] if srt else 0.0
-                for v, c in srt:
-                    cum += c
-                    if cum >= rank:
-                        val = v
-                        break
-                setattr(self, field, float(val))
+            for field, val in zip(fields,
+                                  percentiles_from_items(items, total)):
+                setattr(self, field, val)
 
 
 class Thread:
@@ -298,6 +315,20 @@ class Machine:
             self.channels.qos = self.qos
         else:
             self.qos = None
+        # latency provenance (core/obs.py): same attach-only-when-on
+        # contract — obs-active cells are a conflict class (run_fused
+        # refuses; batched_quantum and the reference loop share the one
+        # staged read dispatch), zero-obs runs construct nothing and pay
+        # one is-None test per retire site. Lives on the state object
+        # too so flash-layer GC carves and compaction can emit events.
+        if cfg.obs.enabled:
+            from repro.core.obs import ObsModel
+
+            self.obs = ObsModel(cfg)
+            self.channels.obs = self.obs
+            self.state.obs = self.obs
+        else:
+            self.obs = None
         self.cache = DataCache(cfg, self.state)
         self.log = WriteLog(cfg, self.state) if cfg.enable_write_log else None
         self.host = self.state.host
@@ -369,6 +400,9 @@ class Machine:
             st.log_flushed_pages += 1
             st.log_flushed_lines += len(lines)
         log.finish_compaction()
+        o = st.obs
+        if o is not None:
+            o.on_compaction(now, len(old))
 
     # ---- request service ----
     def serve(self, page: int, line: int, is_write: bool, now: float, wslots):
@@ -428,6 +462,9 @@ class Machine:
             if stall > 0.0:  # variable latency: tail-histogram it
                 st.ssd_w_var += 1
                 st.lat_hist_w[_lat_bin(lat)] += 1
+                o = self.obs
+                if o is not None:  # KEEP IN SYNC with engine write-miss
+                    o.commit_write_stall(lat, stall, now)
             return lat, None, "ssd_w"
 
         # ---- read ----
@@ -449,12 +486,18 @@ class Machine:
                 self._handle_evict(ev, now)
                 st.ctx_switches += 1
                 self._maybe_promote(page, now)
+                o = self.obs
+                if o is not None:  # parked: the squashed access never
+                    o.on_park()    # retires, drop the staged read
                 return 0.0, done, "switched"
         done = self.channels.read(ch, d, now)
         ev = self.cache.insert(page, False)
         self._handle_evict(ev, now)
         self._maybe_promote(page, now)
         lat = (done - now) + base + cfg.cache_index_ns + cfg.ssd_dram_ns
+        o = self.obs
+        if o is not None:  # KEEP IN SYNC with engine read-miss sites
+            o.commit_read_miss(lat)
         return lat, None, "miss_flash"
 
 
@@ -680,6 +723,8 @@ def simulate(
     st.gc_events = ds.gc_events
     st.finalize(cfg, ds)
     out = st.as_dict()
+    if m.obs is not None:  # latency-provenance summary (core/obs.py)
+        out["obs"] = m.obs.finalize(st, ds)
     if ds.flash is not None:  # block FTL wear accounting
         out["wear_max_erases"] = int(ds.flash.blk_erase.max())
         out["wear_mean_erases"] = float(ds.flash.blk_erase.mean())

@@ -73,6 +73,11 @@ class Channels:
         # Config validation forbids fault+QoS together, so at most one
         # dispatch fires per read.
         self.qos = None
+        # latency-provenance recorder (core/obs.py); attached by
+        # Machine.__init__ when cfg.obs.enabled. Unlike fault/qos it
+        # COMPOSES with either: capture happens inside each read method
+        # behind its own is-not-None test, not via the dispatch slots.
+        self.obs = None
         # per-window suspend budget refill (see DeviceState.gc_susp_left);
         # cached here for the legacy gc() carve below
         self.gc_susp_max = cfg.gc_suspend_max
@@ -111,6 +116,8 @@ class Channels:
         s = self.s
         die = s.chan_die[ch]
         dv = die[d]
+        o = self.obs
+        pause = 0.0
         if gc_attr and dv > now:
             gu = s.gc_die_until[ch][d]
             if gu > now:
@@ -121,8 +128,12 @@ class Channels:
                 if pause > 0.0:
                     s.gc_stall_events += 1
                     s.gc_pause_ns_total += pause
+                    if o is not None:
+                        o.gc_pause_site += pause  # bit-exact mirror
                     if pause > s.gc_pause_max_ns:
                         s.gc_pause_max_ns = pause
+                else:
+                    pause = 0.0
         start = now if now > dv else dv
         sensed = start + self.read_ns
         xfer_start = max(sensed, s.chan_bus[ch])
@@ -131,6 +142,14 @@ class Channels:
         s.chan_bus[ch] = done
         s.chan_busy_ns += TRANSFER_NS + self.read_ns / DIES_PER_CHANNEL
         s.flash_reads += 1
+        if o is not None and gc_attr:
+            die_wait = start - now
+            queue = die_wait - pause
+            if queue < 0.0:
+                queue = 0.0
+            o.stage_read(ch, d, now, die_wait, queue, pause, 0.0, 0.0,
+                         0.0, self.read_ns, 0.0, xfer_start - sensed,
+                         TRANSFER_NS, done)
         return done
 
     def write(self, ch: int, d: int, now: float) -> float:
@@ -144,6 +163,9 @@ class Channels:
         die[d] = done
         s.chan_busy_ns += TRANSFER_NS + self.program_ns / DIES_PER_CHANNEL
         s.flash_writes += 1
+        o = self.obs
+        if o is not None:
+            o.on_program(now)
         return done
 
     def gc(self, now: float) -> None:
@@ -170,6 +192,10 @@ class Channels:
         s.chan_busy_ns += cost / DIES_PER_CHANNEL
         s.gc_events += 1
         s.gc_migrated_pages += 8  # the fixed migration the cost models
+        o = self.obs
+        if o is not None:
+            o.on_gc_window(ch, d, start, s.chan_die[ch][d])
+            o.on_gc_migrated(now, 8)
 
 
 class Ftl:

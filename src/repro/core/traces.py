@@ -26,13 +26,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
-import logging
 import os
 import tempfile
 from pathlib import Path
 from typing import Dict, List
 
 import numpy as np
+
+from repro.log import get_logger
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,7 +233,7 @@ _DISK_CACHE_MAX_EVENTS = 8_000_000
 # <= 0 disables the bound.
 _DISK_CACHE_DEFAULT_GB = 2.0
 
-_LOG = logging.getLogger(__name__)
+_LOG = get_logger(__name__)
 
 
 def _disk_cache_cap_bytes() -> int:

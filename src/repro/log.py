@@ -1,0 +1,81 @@
+"""Central logging for the repro package.
+
+One stderr handler, configured lazily on the first ``get_logger`` call
+and shared by every module under the ``repro.`` / ``benchmarks.``
+namespaces. The verbosity knob is the ``REPRO_LOG`` environment
+variable:
+
+    REPRO_LOG=debug   everything (per-artifact cache traffic, ...)
+    REPRO_LOG=info    operational notices (trace-cache evictions, ...)
+    REPRO_LOG=warn    problems only (failed cells, corrupt artifacts)
+
+Default is ``warn``: benchmark CSV output stays clean, and the
+previously logger-less modules (core/traces.py used a bare
+``logging.getLogger`` with no handler, so its INFO eviction summaries
+vanished) keep exactly their old visible behavior until someone opts
+in. Lines are prefixed ``# `` like the orchestrator's status output, so
+they stay comment-shaped when interleaved with CSV on a terminal.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_LEVELS = {
+    "debug": logging.DEBUG,
+    "info": logging.INFO,
+    "warn": logging.WARNING,
+    "warning": logging.WARNING,
+    "error": logging.ERROR,
+}
+
+_ROOT = "repro"
+_configured = False
+
+
+def _env_level() -> int:
+    raw = os.environ.get("REPRO_LOG", "").strip().lower()
+    if raw and raw not in _LEVELS:
+        # a typo'd level used to silently mean "default"; say so once
+        sys.stderr.write(
+            f"# repro.log: unknown REPRO_LOG={raw!r} "
+            f"(want {'|'.join(sorted(set(_LEVELS) - {'warning'}))}); "
+            f"using warn\n")
+    return _LEVELS.get(raw, logging.WARNING)
+
+
+def _configure() -> None:
+    global _configured
+    root = logging.getLogger(_ROOT)
+    handler = logging.StreamHandler(sys.stderr)
+    handler.setFormatter(logging.Formatter("# %(levelname)s %(name)s: "
+                                           "%(message)s"))
+    root.addHandler(handler)
+    root.setLevel(_env_level())
+    # propagation stays ON: the stdlib root normally has no handlers (so
+    # nothing double-prints), and capture tooling — pytest's caplog in
+    # particular — listens at the root
+    _configured = True
+
+
+def get_logger(name: str) -> logging.Logger:
+    """Logger for ``name``, parented under the shared ``repro`` root.
+
+    Accepts any dotted module name: ``repro.*`` children are returned
+    as-is, anything else (``benchmarks.run``, ``__main__``) is grafted
+    under the root so the single handler and REPRO_LOG level apply
+    uniformly.
+    """
+    if not _configured:
+        _configure()
+    if name != _ROOT and not name.startswith(_ROOT + "."):
+        name = f"{_ROOT}.{name}"
+    return logging.getLogger(name)
+
+
+def set_level(level: str) -> None:
+    """Programmatic override of the REPRO_LOG level (tests, notebooks)."""
+    if not _configured:
+        _configure()
+    logging.getLogger(_ROOT).setLevel(_LEVELS[level.strip().lower()])

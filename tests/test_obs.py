@@ -1,0 +1,256 @@
+"""Latency provenance (core/obs.py): the conservation contract, engine
+parity of the whole obs artifact, zero-obs invisibility, interval-ring
+totals, and the Perfetto trace export.
+
+The load-bearing property is CONSERVATION: for every retired
+host-visible read miss and write stall, the attributed components sum
+bit-exactly to the latency the engine recorded (closure nudges the
+queue slot; an unclosable event collapses to one slot and is counted in
+closure_fallbacks — ``violations`` must be structurally zero). The
+second structural property is that the obs artifact is identical across
+engines: obs is a conflict class, both engines route every flash read
+through the one staging site and retire in the same global order, so
+the whole JSON block must compare equal — not approximately."""
+import dataclasses
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.configs.base import FaultConfig, ObsConfig, SimConfig, VARIANTS
+from repro.core import engine as engine_mod
+from repro.core.obs import _RCHAIN, to_perfetto
+from repro.core.simulator import (Machine, percentiles_from_items, simulate)
+
+OBS = ObsConfig(enabled=True)
+
+# GC near-continuously live (same knobs as the QoS suite's storm cell)
+STORM = dict(op_ratio=0.015, write_log_bytes=1 << 19,
+             host_dram_bytes=64 << 20)
+
+# the four regimes the attribution chain has distinct slots for
+SCENARIOS = {
+    "baseline": dict(),
+    "gc-storm": dict(STORM),
+    "qos": dict(STORM, gc_suspend=True, read_priority=True),
+    "fault": dict(STORM, fault=FaultConfig(
+        read_error_rate=3e-3, outage_rate=1e-3,
+        power_loss_at=(500,), die_fail_at=(900,))),
+}
+
+N_REQ = 40_000
+
+
+def _run(engine, workload, variant, n=N_REQ, seed=0, obs=OBS, **overrides):
+    cfg = dataclasses.replace(SimConfig(), engine=engine, obs=obs,
+                              **overrides)
+    return simulate(workload, variant, cfg, total_req=n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# knob validation
+# ---------------------------------------------------------------------------
+
+def test_odd_or_tiny_window_ring_rejected():
+    for bad in (0, 1, 3, 255):
+        with pytest.raises(ValueError, match="max_windows"):
+            dataclasses.replace(SimConfig(), obs=ObsConfig(
+                enabled=True, max_windows=bad))
+
+
+def test_nonpositive_window_rejected():
+    with pytest.raises(ValueError, match="window_ns"):
+        dataclasses.replace(SimConfig(), obs=ObsConfig(
+            enabled=True, window_ns=0.0))
+
+
+def test_disabled_obs_knobs_not_validated():
+    # enabled=False configs never construct an ObsModel; bad knobs in a
+    # dormant block must not break unrelated cells
+    dataclasses.replace(SimConfig(), obs=ObsConfig(max_windows=3))
+
+
+# ---------------------------------------------------------------------------
+# conservation + engine parity: the full scenario sweep
+# ---------------------------------------------------------------------------
+
+def _check_conservation(r):
+    ob = r["obs"]
+    c = ob["conservation"]
+    assert c["violations"] == 0
+    assert c["pass"], c
+    assert c["gc_pause_exact"]
+    assert c["gc_pause_site_ns"] == c["gc_pause_device_ns"]
+    assert c["checked"] == ob["n_miss"] + ob["n_stall"]
+    # commit counts mirror the Stats classes one-for-one
+    assert ob["n_miss"] == r["miss_flash"]
+    assert ob["n_stall"] == r["ssd_w_var"]
+    return ob
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_conservation_and_parity(variant, scenario):
+    over = SCENARIOS[scenario]
+    if variant == "dram-only" and scenario != "baseline":
+        pytest.skip("no flash traffic to attribute")
+    blocks = []
+    for engine in ("reference", "batched"):
+        r = _run(engine, "ycsb", variant, **over)
+        ob = _check_conservation(r)
+        blocks.append(json.dumps(ob, sort_keys=True))
+    # bit-exact artifact parity: same staging site, same retire order
+    assert blocks[0] == blocks[1]
+
+
+def test_fault_scenario_attributes_fault_slots():
+    r = _run("reference", "ycsb", "base-cssd", cache_ways=1,
+             ssd_dram_bytes=32 << 20, host_dram_bytes=64 << 20,
+             fault=SCENARIOS["fault"]["fault"])
+    ob = _check_conservation(r)
+    comps = ob["components"]
+    # the armed fault classes must actually land in their own slots
+    assert comps["retry"]["total_ns"] > 0.0
+    assert comps["outage"]["total_ns"] > 0.0
+    assert any(e["kind"] == "recovery" for e in ob["events"]["list"])
+
+
+def test_gc_storm_attributes_pause_exactly():
+    r = _run("reference", "dlrm", "base-cssd", **STORM)
+    ob = _check_conservation(r)
+    assert r["gc_pause_ns_total"] > 0.0
+    # base-cssd retires every staged read (no parking), so the staged
+    # pause totals are exactly the device-side counter
+    assert ob["components"]["gc_pause"]["total_ns"] == r["gc_pause_ns_total"]
+
+
+def test_slowest_k_parts_sum_to_latency():
+    r = _run("reference", "dlrm", "base-cssd", **STORM)
+    slowest = r["obs"]["slowest"]
+    assert slowest
+    lats = [s["lat_ns"] for s in slowest]
+    assert lats == sorted(lats, reverse=True)
+    for s in slowest:
+        assert tuple(s["parts"]) == _RCHAIN  # insertion order = chain order
+        total = 0.0
+        for name in _RCHAIN:  # same left-to-right order closure verified
+            total += s["parts"][name]
+        assert total == s["lat_ns"]
+
+
+# ---------------------------------------------------------------------------
+# zero-obs: nothing attached, fused engine stays eligible
+# ---------------------------------------------------------------------------
+
+def test_zero_obs_attaches_nothing():
+    m = Machine(SimConfig().variant("base-cssd"), 0, 1 << 14)
+    assert m.obs is None
+    assert m.channels.obs is None
+    assert m.state.obs is None
+
+
+def test_zero_obs_keeps_fused_engine_eligible():
+    _run("batched", "ycsb", "skybyte-w", obs=ObsConfig())
+    assert engine_mod.FUSED_STATS["fused_events"] > 0
+    r = _run("batched", "ycsb", "skybyte-w")
+    # obs is a conflict class: the mega-loop must refuse and fall back
+    assert engine_mod.FUSED_STATS["fused_events"] == 0
+    assert "obs" in r
+
+
+def test_zero_obs_result_has_no_obs_block():
+    r = _run("reference", "ycsb", "base-cssd", obs=ObsConfig())
+    assert "obs" not in r
+
+
+# ---------------------------------------------------------------------------
+# interval ring
+# ---------------------------------------------------------------------------
+
+def test_interval_totals_match_end_of_run():
+    r = _run("reference", "dlrm", "base-cssd", **STORM)
+    ob = r["obs"]
+    ws = ob["intervals"]["windows"]
+    comps = ob["components"]
+    assert sum(w["reads"] for w in ws) == ob["n_miss"]
+    assert sum(w["misses"] for w in ws) == ob["n_miss"]
+    assert sum(w["stalls"] for w in ws) == ob["n_stall"]
+    assert sum(w["gc_migrated"] for w in ws) == r["gc_migrated_pages"]
+    staged_pause = (comps["gc_pause"]["total_ns"]
+                    + comps["gc_suspend"]["total_ns"])
+    assert sum(w["gc_pause_ns"] for w in ws) == pytest.approx(staged_pause)
+
+
+def test_interval_ring_folds_and_preserves_totals():
+    tight = ObsConfig(enabled=True, max_windows=4)
+    a = _run("reference", "dlrm", "base-cssd", obs=tight, **STORM)
+    b = _run("reference", "dlrm", "base-cssd", **STORM)
+    ia, ib = a["obs"]["intervals"], b["obs"]["intervals"]
+    assert ia["folds"] > 0
+    assert ia["n_windows"] <= 4
+    assert ia["window_ns"] == b["obs"]["meta"]["window_ns"] * 2 ** (
+        ia["folds"] - ib["folds"])
+    for key in ("reads", "misses", "stalls", "gc_migrated"):
+        assert (sum(w[key] for w in ia["windows"])
+                == sum(w[key] for w in ib["windows"]))
+
+
+# ---------------------------------------------------------------------------
+# perfetto export
+# ---------------------------------------------------------------------------
+
+def _valid_trace(trace):
+    assert set(trace) >= {"traceEvents", "displayTimeUnit"}
+    assert trace["displayTimeUnit"] == "ns"
+    pids = set()
+    for ev in trace["traceEvents"]:
+        assert ev["ph"] in ("X", "M", "i", "s", "f")
+        assert isinstance(ev["pid"], int)
+        pids.add(ev["pid"])
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+            assert ev["ts"] >= 0.0
+        if ev["ph"] in ("s", "f"):
+            assert "id" in ev
+    # every referenced pid must carry a process_name metadata record
+    named = {ev["pid"] for ev in trace["traceEvents"]
+             if ev["ph"] == "M" and ev["name"] == "process_name"}
+    assert pids <= named
+
+
+def test_perfetto_export_is_valid_and_deterministic():
+    r1 = _run("reference", "dlrm", "base-cssd", **STORM)
+    r2 = _run("batched", "dlrm", "base-cssd", **STORM)
+    t1 = to_perfetto(r1["obs"], title="t")
+    t2 = to_perfetto(r2["obs"], title="t")
+    _valid_trace(t1)
+    assert json.dumps(t1, sort_keys=True) == json.dumps(t2, sort_keys=True)
+    names = {e["name"] for e in t1["traceEvents"] if e["ph"] == "X"}
+    assert "gc_window" in names  # the storm must be visible on the track
+
+
+def test_trace_export_cli_writes_valid_json(tmp_path):
+    out = tmp_path / "trace.json"
+    root = Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [sys.executable, str(root / "scripts" / "trace_export.py"),
+         "--workload", "ycsb", "--variant", "base-cssd",
+         "--total-req", "30000", "-o", str(out)],
+        capture_output=True, text=True, cwd=root,
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stderr
+    _valid_trace(json.loads(out.read_text()))
+
+
+# ---------------------------------------------------------------------------
+# shared percentile helper (satellite: one implementation, two callers)
+# ---------------------------------------------------------------------------
+
+def test_percentiles_from_items_walks_the_multiset():
+    items = [(10.0, 50), (20.0, 49), (1000.0, 1)]
+    p50, p95, p99 = percentiles_from_items(items, 100)
+    assert (p50, p95, p99) == (10.0, 20.0, 20.0)
+    assert percentiles_from_items(items, 100, (1.0,)) == [1000.0]
+    assert percentiles_from_items([], 0) == [0.0, 0.0, 0.0]
