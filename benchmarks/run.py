@@ -31,7 +31,7 @@ import time
 from pathlib import Path
 
 from repro.configs.base import ObsConfig, SimConfig
-from repro.core.simulator import simulate
+from repro.core.simulator import ENGINES, simulate
 from repro.log import get_logger
 
 from benchmarks import (
@@ -74,11 +74,15 @@ BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
 _LOG = get_logger(__name__)
 
 
-# Calibration cells: a ctx-switch-bound cell (short quanta — the regime
-# the classification cache targets), the paper's headline configuration,
-# and a boundary-free cell (pure vector path).
+# Calibration cells: ctx-switch-bound cells (short quanta — the regime
+# the classification cache and the turbo burst walks target; tpcc/srad
+# burst harder than bfs-dense, so they are the turbo engine's acceptance
+# cells), the paper's headline configuration, and a boundary-free cell
+# (pure vector path).
 CALIBRATION_CELLS = (
     ("bfs-dense", "skybyte-c"),
+    ("tpcc", "skybyte-c"),
+    ("srad", "skybyte-cp"),
     ("bfs-dense", "skybyte-full"),
     ("ycsb", "dram-only"),
 )
@@ -117,6 +121,25 @@ def calibrate_engines(total_req: int = 200_000) -> dict:
             cell["vector_events"] = fstats["vector_events"]
             cell["fused_frac"] = round(_engine.fused_fraction(r["n"]), 4)
             cell["events_per_sec"] = cell["batched"]
+            # turbo engine on the same cell: throughput next to the exact
+            # engines plus its exported drift bound (info-only in
+            # bench_diff; the hard acceptance runs through
+            # scripts/paired_bench.py --engines batched,turbo)
+            from repro.core import turbo as _turbo
+
+            cfg_t = dataclasses.replace(SimConfig(), engine="turbo")
+            t0 = time.process_time()
+            rt = simulate(workload, variant, cfg_t, total_req=total_req,
+                          seed=0)
+            t_reqps = round(rt["n"] / max(time.process_time() - t0, 1e-9), 1)
+            cell["turbo"] = {
+                "events_per_sec": t_reqps,
+                "speedup_vs_batched": round(
+                    t_reqps / max(cell["batched"], 1e-9), 2),
+                "drift_max": rt.get("turbo_drift_max", 0.0),
+                "drift_mean": rt.get("turbo_drift_mean", 0.0),
+                "fallback": bool(_turbo.TURBO_STATS["fallbacks"]),
+            }
             # latency-provenance summary for the same cell (info-only in
             # bench_diff: obs is an instrumentation layer, not a perf
             # gate). One obs-enabled run on the batched engine — obs is a
@@ -155,8 +178,8 @@ def main(argv=None) -> None:
                          "execution resources and inflate grid CPU time "
                          "for marginal wall gain)")
     ap.add_argument("--engine", default="",
-                    choices=["", "reference", "batched"],
-                    help="force a replay engine (default: SimConfig default)")
+                    help="force a replay engine (default: SimConfig "
+                         "default; see repro.core.simulator.ENGINES)")
     ap.add_argument("--profile", action="store_true",
                     help="print per-section req/s and cache hit counts")
     ap.add_argument("--no-calibrate", action="store_true",
@@ -170,6 +193,11 @@ def main(argv=None) -> None:
     if unknown:
         ap.error(f"unknown --only section(s): {', '.join(unknown)}; "
                  f"valid sections: {', '.join(sorted(valid))}")
+    # same fail-loudly contract as --only: a typo'd engine name used to
+    # surface only deep inside simulate(); validate against the registry
+    if args.engine and args.engine not in ENGINES:
+        ap.error(f"unknown --engine: {args.engine!r}; "
+                 f"valid engines: {', '.join(ENGINES)}")
 
     if args.jobs <= 0:
         phys = common.physical_cores()

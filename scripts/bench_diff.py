@@ -79,6 +79,25 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> tuple:
                 f"{ob.get('n_miss', 0)} reads / {ob.get('n_stall', 0)} "
                 f"stalls attributed, {ob.get('closure_fallbacks', 0)} "
                 f"closure fallbacks (informational)")
+    # turbo blocks are informational too: the two-tier contract is
+    # enforced by tests/test_engine_turbo.py, and the perf acceptance by
+    # the paired --engines protocol — not by this cold-vs-cold diff
+    for cell, c in sorted(fresh.get("engine_reqps", {}).items()):
+        tb = c.get("turbo")
+        if tb:
+            infos.append(
+                f"turbo {cell}: {tb.get('events_per_sec', 0.0):.2e} ev/s, "
+                f"{tb.get('speedup_vs_batched', 0.0):.2f}x vs batched, "
+                f"drift_max {tb.get('drift_max', 0.0):.1e}"
+                f"{', FELL BACK' if tb.get('fallback') else ''} "
+                f"(informational)")
+    pe = fresh.get("paired_engines")
+    if pe:
+        for cell, r in sorted(pe.get("cells", {}).items()):
+            infos.append(
+                f"paired {pe.get('baseline')}->{pe.get('candidate')} "
+                f"{cell}: {r.get('speedup', 0.0):.2f}x (interleaved "
+                f"best-of-3 CPU, informational)")
     return problems, infos
 
 

@@ -16,6 +16,7 @@
 #   bash scripts/ci.sh qos        # die-level QoS: suspend/priority/striping
 #   bash scripts/ci.sh obs        # latency provenance: conservation + export
 #   bash scripts/ci.sh bench      # orchestrator smoke + baseline diff
+#   bash scripts/ci.sh turbo      # fast-math turbo engine: two-tier contract
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -130,6 +131,26 @@ if [[ "$STAGE" == "all" || "$STAGE" == "bench" ]]; then
   # was a latent flake.
   python scripts/bench_diff.py --baseline BENCH_baseline.json \
     --fresh BENCH_sim.json --tolerance 0.35
+fi
+
+if [[ "$STAGE" == "all" || "$STAGE" == "turbo" ]]; then
+  echo "== fast-math turbo engine: two-tier contract + dispatch microbench =="
+  # The turbo engine reassociates float additions, so its contract is
+  # split: discrete outputs (scheduler decisions, counts, FTL state,
+  # DeviceState.discrete_signature()) bit-equal to the reference; timing
+  # outputs within turbo_rtol with an exported a-priori drift bound;
+  # conflict classes (faults/QoS/obs/inline-promo) refusing to the
+  # bit-exact fallback. Perf acceptance is measured separately with
+  # scripts/paired_bench.py --engines batched,turbo (interleaved
+  # best-of-3 CPU); this stage gates correctness, not speed.
+  python -m pytest -x -q tests/test_engine_turbo.py
+  # Record the dispatch-fee numbers that motivate the design. Runs after
+  # the bench stage so the merge into BENCH_sim.json persists.
+  if [[ -f BENCH_sim.json ]]; then
+    python scripts/dispatch_overhead.py --json BENCH_sim.json
+  else
+    python scripts/dispatch_overhead.py
+  fi
 fi
 
 echo "CI OK"

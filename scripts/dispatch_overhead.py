@@ -1,0 +1,123 @@
+"""Microbench: what one NumPy call costs on this box, and the run length
+where vectorizing starts to win over the scalar CPython float chain.
+
+The turbo engine's central design bet (core/turbo.py) is that per-run
+NumPy dispatch is NOT free: handing a ~28-event scheduling window to a
+vector kernel pays the ufunc dispatch fee (argument parsing, dtype
+resolution, buffer setup) per window, while the whole-trace prefix sum
+pays it once per thread. This script measures the three numbers that
+decide the trade on the current interpreter/NumPy/CPU combination:
+
+  * scalar_ns_per_event — one `t += g` step of a plain Python float
+    chain (the reference/fused engines' per-event timeline cost);
+  * vector_ns_per_elem  — asymptotic per-element cost of np.cumsum on a
+    long float64 array (the turbo engine's amortized regime);
+  * dispatch_ns_per_call — the fixed fee of one tiny np.cumsum call
+    after subtracting its per-element share.
+
+Break-even run length = dispatch / (scalar - vector): below it a window
+is cheaper to walk in pure Python, above it the vector call wins. On the
+calibration boxes this lands in the hundreds — far above the measured
+~2.7-event bursts and ~28-event ctx windows — which is why the turbo
+walks fold bursts with integer counters instead of calling NumPy per
+window.
+
+  PYTHONPATH=src python scripts/dispatch_overhead.py
+  PYTHONPATH=src python scripts/dispatch_overhead.py --json BENCH_sim.json
+
+With --json the result block is merged into an existing report under
+"dispatch_overhead" (the same in-place annotation protocol as
+paired_bench.py), so it rides along in BENCH_sim.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+_BIG = 262_144  # long enough that dispatch is noise on the big call
+_SMALL = 4      # typical burst scale: dispatch dominates
+_REPS = 7       # best-of reps; min() rejects scheduler interference
+
+
+def _best(f, inner: int) -> float:
+    """Best-of-_REPS mean ns of one f() call, f looped `inner` times."""
+    best = float("inf")
+    for _ in range(_REPS):
+        t0 = time.perf_counter_ns()
+        for _ in range(inner):
+            f()
+        dt = (time.perf_counter_ns() - t0) / inner
+        if dt < best:
+            best = dt
+    return best
+
+
+def measure() -> dict:
+    rng = np.random.default_rng(0)
+    big = rng.random(_BIG)
+    small = big[:_SMALL].copy()
+    big_out = np.empty_like(big)
+    small_out = np.empty_like(small)
+    gaps = big[:4096].tolist()
+
+    def scalar_chain():
+        t = 0.0
+        for g in gaps:
+            t += g
+        return t
+
+    scalar_ns = _best(scalar_chain, 16) / len(gaps)
+    big_ns = _best(lambda: np.cumsum(big, out=big_out), 8)
+    vector_ns = big_ns / _BIG
+    small_ns = _best(lambda: np.cumsum(small, out=small_out), 4096)
+    dispatch_ns = max(small_ns - _SMALL * vector_ns, 0.0)
+    denom = scalar_ns - vector_ns
+    break_even = dispatch_ns / denom if denom > 0 else float("inf")
+    return {
+        "scalar_ns_per_event": round(scalar_ns, 2),
+        "vector_ns_per_elem": round(vector_ns, 3),
+        "dispatch_ns_per_call": round(dispatch_ns, 1),
+        "break_even_run_len": round(break_even, 1),
+        "numpy": np.__version__,
+    }
+
+
+def _write_json(path: Path, results: dict) -> None:
+    doc = {"dispatch_overhead": results}
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+        except ValueError:
+            prior = None
+        if isinstance(prior, dict):
+            prior["dispatch_overhead"] = results
+            doc = prior
+    path.write_text(json.dumps(doc, indent=1))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="merge the result into this report file under "
+                         "'dispatch_overhead' (e.g. BENCH_sim.json)")
+    args = ap.parse_args(argv)
+    r = measure()
+    print(f"# scalar float chain: {r['scalar_ns_per_event']} ns/event")
+    print(f"# vector cumsum:      {r['vector_ns_per_elem']} ns/elem "
+          f"(numpy {r['numpy']})")
+    print(f"# dispatch fee:       {r['dispatch_ns_per_call']} ns/call")
+    print(f"# break-even run len: {r['break_even_run_len']} events "
+          f"(shorter runs are cheaper in pure Python)")
+    if args.json:
+        _write_json(Path(args.json), r)
+        print(f"# merged into {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

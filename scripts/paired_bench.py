@@ -1,13 +1,27 @@
-"""Paired A/B CPU-time benchmark: this checkout vs a worktree of another
-commit, interleaved in the same time window so shared-core steal noise
-cancels. Used to validate engine-perf acceptance criteria; results land in
-BENCH_sim.json under "paired_vs_head" when run via --json.
+"""Paired A/B CPU-time benchmark, interleaved in the same time window so
+shared-core steal noise cancels. Two modes:
 
-  PYTHONPATH=src python scripts/paired_bench.py /tmp/pr2head [--json out]
+  * checkout vs checkout (default): this checkout vs a worktree of
+    another commit, both on the default engine. Validates cross-PR
+    perf acceptance; results land in BENCH_sim.json under
+    "paired_vs_head" when run via --json.
+
+      PYTHONPATH=src python scripts/paired_bench.py /tmp/pr2head --json out
+
+  * engine vs engine (--engines A,B): both engines inside THIS checkout,
+    alternated per rep. Validates engine-perf acceptance (e.g. the turbo
+    engine's paired-speedup criterion); results land under
+    "paired_engines".
+
+      PYTHONPATH=src python scripts/paired_bench.py --engines batched,turbo
 
 Each cell is run alternately (A, B, A, B, ...) with ``--reps`` repetitions
 and scored by best-of CPU time (time.process_time of a child worker),
 which on a steal-heavy container is the stable signal (see DESIGN.md).
+
+When --json points at an existing benchmark report (a JSON object), the
+mode's result block is merged under its key instead of overwriting the
+file, so both modes can annotate BENCH_sim.json in place.
 """
 from __future__ import annotations
 
@@ -19,6 +33,8 @@ from pathlib import Path
 
 CELLS = (
     ("bfs-dense", "skybyte-c"),
+    ("tpcc", "skybyte-c"),
+    ("srad", "skybyte-cp"),
     ("bfs-dense", "skybyte-full"),
     ("tpcc", "skybyte-full"),
     ("srad", "skybyte-w"),
@@ -26,30 +42,59 @@ CELLS = (
     ("ycsb", "dram-only"),
 )
 
+# One untimed run warms the trace cache and each engine's derived-column
+# caches, then the second run is timed: steady-state replay throughput,
+# the same protocol as the in-process engine calibration. Both sides of
+# every pairing get identical treatment.
 _WORKER = r"""
 import dataclasses, sys, time
 from repro.configs.base import SimConfig
 from repro.core.simulator import simulate
-wl, variant, n = sys.argv[1], sys.argv[2], int(sys.argv[3])
-cfg = dataclasses.replace(SimConfig(), engine="batched")
+wl, variant, n, eng = sys.argv[1], sys.argv[2], int(sys.argv[3]), sys.argv[4]
+cfg = dataclasses.replace(SimConfig(), engine=eng) if eng else SimConfig()
+simulate(wl, variant, cfg, total_req=n, seed=0)
 t0 = time.process_time()
 simulate(wl, variant, cfg, total_req=n, seed=0)
 print(time.process_time() - t0)
 """
 
 
-def run_cell(root: Path, wl: str, variant: str, n: int) -> float:
+def run_cell(root: Path, wl: str, variant: str, n: int,
+             engine: str = "") -> float:
     out = subprocess.run(
-        [sys.executable, "-c", _WORKER, wl, variant, str(n)],
+        [sys.executable, "-c", _WORKER, wl, variant, str(n), engine],
         capture_output=True, text=True, check=True,
         env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"},
     )
     return float(out.stdout.strip())
 
 
+def _write_json(path: Path, key: str, results: dict) -> None:
+    """Merge under ``key`` when the target is an existing JSON object
+    (e.g. BENCH_sim.json); otherwise write a fresh single-key document."""
+    doc = {key: results}
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+        except ValueError:
+            prior = None
+        if isinstance(prior, dict):
+            prior[key] = results
+            doc = prior
+    path.write_text(json.dumps(doc, indent=1))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline_root", help="worktree of the commit to compare against")
+    ap.add_argument("baseline_root", nargs="?", default="",
+                    help="worktree of the commit to compare against "
+                         "(omit when using --engines)")
+    ap.add_argument("--engines", default="",
+                    help="comma-separated pair BASE,CAND: baseline engine "
+                         "vs candidate engine inside this checkout "
+                         "(interleaved); reported speedup = "
+                         "BASE_cpu / CAND_cpu, i.e. >1 means the "
+                         "candidate is faster")
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--json", default="")
@@ -58,7 +103,30 @@ def main(argv=None) -> int:
                          "(e.g. --cells bfs-dense runs just the ctx-bound cells)")
     args = ap.parse_args(argv)
     here = Path(__file__).resolve().parent.parent
-    base = Path(args.baseline_root)
+    eng_a = eng_b = ""
+    if args.engines:
+        pair = [e.strip() for e in args.engines.split(",")]
+        if len(pair) != 2 or not all(pair):
+            ap.error(f"--engines wants exactly two names (A,B), "
+                     f"got {args.engines!r}")
+        # validate against the simulator's registry so a typo fails here,
+        # not per-cell inside the child workers
+        sys.path.insert(0, str(here / "src"))
+        from repro.core.simulator import ENGINES
+
+        bad = sorted(set(pair) - set(ENGINES))
+        if bad:
+            ap.error(f"unknown engine(s): {', '.join(bad)}; "
+                     f"valid engines: {', '.join(ENGINES)}")
+        # the baseline engine rides in the b (head) slot so the reported
+        # speedup keeps the default mode's meaning: >1 = candidate faster
+        eng_b, eng_a = pair
+        if args.baseline_root:
+            ap.error("--engines compares inside this checkout; "
+                     "baseline_root does not apply")
+    elif not args.baseline_root:
+        ap.error("need a baseline_root worktree or --engines A,B")
+    base = Path(args.baseline_root) if args.baseline_root else here
     cells = CELLS
     if args.cells:
         pats = [p.strip() for p in args.cells.split(",") if p.strip()]
@@ -71,18 +139,32 @@ def main(argv=None) -> int:
     for wl, variant in cells:
         a_best = b_best = float("inf")
         for _ in range(args.reps):  # interleaved: same steal window for both
-            b_best = min(b_best, run_cell(base, wl, variant, args.n))
-            a_best = min(a_best, run_cell(here, wl, variant, args.n))
+            b_best = min(b_best, run_cell(base, wl, variant, args.n, eng_b))
+            a_best = min(a_best, run_cell(here, wl, variant, args.n, eng_a))
         speedup = b_best / max(a_best, 1e-9)
-        results[f"{wl}/{variant}"] = {
-            "head_cpu_s": round(b_best, 3),
-            "this_cpu_s": round(a_best, 3),
-            "speedup": round(speedup, 2),
-        }
-        print(f"{wl}/{variant}: head={b_best:.3f}s this={a_best:.3f}s "
-              f"({speedup:.2f}x)", flush=True)
+        if args.engines:
+            results[f"{wl}/{variant}"] = {
+                f"{eng_b}_cpu_s": round(b_best, 3),
+                f"{eng_a}_cpu_s": round(a_best, 3),
+                "speedup": round(speedup, 2),
+            }
+            print(f"{wl}/{variant}: {eng_b}={b_best:.3f}s "
+                  f"{eng_a}={a_best:.3f}s ({speedup:.2f}x)", flush=True)
+        else:
+            results[f"{wl}/{variant}"] = {
+                "head_cpu_s": round(b_best, 3),
+                "this_cpu_s": round(a_best, 3),
+                "speedup": round(speedup, 2),
+            }
+            print(f"{wl}/{variant}: head={b_best:.3f}s this={a_best:.3f}s "
+                  f"({speedup:.2f}x)", flush=True)
     if args.json:
-        Path(args.json).write_text(json.dumps(results, indent=1))
+        if args.engines:
+            _write_json(Path(args.json), "paired_engines",
+                        {"baseline": eng_b, "candidate": eng_a,
+                         "cells": results})
+        else:
+            _write_json(Path(args.json), "paired_vs_head", results)
     return 0
 
 

@@ -453,7 +453,23 @@ class SimConfig:
     #   boundary is transcribed in the engine itself.
     # "reference": the original per-event Python loop (ground truth;
     #   Machine.serve() survives as its parity oracle).
+    # "turbo": opt-in fast-math engine (core/turbo.py). Every discrete
+    #   decision (scheduling, classification, GC, FTL mapping, park/
+    #   promote/compact) stays bit-exact with the other two engines; only
+    #   the four float timeline chains are reassociated — per-event
+    #   `t += gap; t += lat` scalar adds become one gap prefix-sum per
+    #   thread plus count*constant folds per boundary. Timing outputs
+    #   (AMAT, exec_ns, percentiles) may drift within turbo_rtol.
     engine: str = "batched"
+    # Upper bound the turbo engine accepts on its own accumulated
+    # relative timing error (engine="turbo" only; see turbo_drift_* in
+    # Stats). The engine tracks an a-priori reassociation bound — ulps
+    # per time re-anchor plus the gap prefix-sum's n*eps term — and
+    # raises if the bound exceeds this knob, so a run can never silently
+    # report timings looser than the configured contract. Default 1e-9
+    # sits ~3 decades above the measured ~1e-12 drift and ~3 below the
+    # 1e-6 the parity tests assert against the reference engine.
+    turbo_rtol: float = 1e-9
     # Cross-quantum classification cache (batched engine only; see
     # core/engine.py). Classification work persists across scheduling
     # quanta and is repaired through per-page epoch counters instead of
@@ -570,6 +586,12 @@ class SimConfig:
                 "(gc_suspend/read_priority/superblock): FaultModel.read "
                 "and die-failure remap assume per-die blocks and the "
                 "un-arbitrated timing recipe"
+            )
+        if self.turbo_rtol <= 0.0:
+            raise ValueError(
+                f"turbo_rtol must be > 0 (got {self.turbo_rtol}); the turbo "
+                "engine's drift bound is strictly positive on any nonempty "
+                "run — use engine='batched' for bit-exact timelines"
             )
         if self.obs.enabled:
             if self.obs.window_ns <= 0.0:

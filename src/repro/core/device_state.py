@@ -267,3 +267,48 @@ class DeviceState:
         self.epoch_clock = c
         self.page_epoch[pages] = c
         self.journal.extend(pages)
+
+    def discrete_signature(self) -> tuple:
+        """Bit-comparable snapshot of every DISCRETE piece of device
+        state: tier membership and order, cache tags/stamps, write-log
+        contents, FTL mapping/wear/frontiers, and integer event
+        counters. Float timelines (channel/die busy-until, GC pause
+        nanoseconds) are deliberately excluded — they are the APPROXIMATE
+        tier of the turbo engine's contract; everything returned here
+        must be `==` across all three engines (the exact tier, enforced
+        by tests/test_engine_turbo.py)."""
+        fl = self.flash
+        flash_sig = None
+        if fl is not None:
+            flash_sig = (
+                fl.l2p.tobytes(), fl.p2l.tobytes(), fl.pvalid.tobytes(),
+                fl.blk_valid.tobytes(), fl.blk_state.tobytes(),
+                fl.blk_seal.tobytes(), fl.blk_erase.tobytes(),
+                fl.blk_gc.tobytes(), tuple(fl.free), fl.seal_seq,
+                fl.host_blk, fl.host_slot, fl.gc_blk, fl.gc_slot,
+                fl.hot_blk, fl.hot_slot,
+            )
+        log_sig = None
+        if self.log_bits is not None:
+            # dict iteration order is insertion order — part of the
+            # compaction contract, so it participates in the signature
+            log_sig = (self.log_bits.tobytes(),
+                       tuple(self.log_active.items()),
+                       tuple(self.log_old.items()),
+                       self.log_active_n)
+        return (
+            self.page_epoch.tobytes(), self.epoch_clock,
+            tuple(self.host),  # host LRU order, coldest first
+            self.cache_res.tobytes(), self.cache_dirty.tobytes(),
+            self.cache_stamp.tobytes(), self.cache_clock,
+            tuple(map(tuple, self.cache_sets)), tuple(self.cache_way),
+            self.acc.arr.tobytes(),
+            self.flash_reads, self.flash_writes,
+            self.gc_events, self.gc_migrated_pages, self.gc_stall_events,
+            self.ftl_used, self.log_compactions, self.log_flushed_pages,
+            self.log_flushed_lines,
+            self.ft_retry_reads, self.ft_uncorrectable, self.ft_die_failures,
+            self.ft_remapped_pages, self.ft_bad_blocks, self.ft_power_losses,
+            self.gc_suspends, self.gc_resumes, self.rp_bypasses,
+            flash_sig, log_sig,
+        )

@@ -74,6 +74,15 @@ LINE = 64
 
 _LAT_NBINS = 512
 
+# Canonical replay-engine names (SimConfig.engine / REPRO_SIM_ENGINE /
+# benchmarks.run --engine / scripts/paired_bench.py --engines all validate
+# against this tuple — keep it the single source of truth):
+#   reference — per-event Python loop (ground truth)
+#   batched   — vectorized + fused fast path, bit-exact vs reference
+#   turbo     — opt-in fast-math engine (core/turbo.py): discrete state
+#               bit-exact, float timelines within SimConfig.turbo_rtol
+ENGINES = ("reference", "batched", "turbo")
+
 
 def _lat_bin(lat: float) -> int:
     """Histogram bin of one latency (ns): 8 log-scale sub-bins/octave."""
@@ -152,6 +161,12 @@ class Stats:
         "gc_windows", "gc_suspends", "gc_resumes", "gc_resume_ns_total",
         "gc_pause_avoided_ns",
         "rp_bypasses", "rp_wait_saved_ns", "qos_die_wait_max_ns",
+        # fast-math turbo engine drift accounting (core/turbo.py): the
+        # engine's a-priori bound on the relative error of the float
+        # timelines vs the reference chains (max/mean over threads).
+        # Exactly 0 for the reference/batched engines and for turbo runs
+        # that refused onto the exact fallback path.
+        "turbo_drift_max", "turbo_drift_mean",
     )
 
     def __init__(self):
@@ -692,19 +707,34 @@ def simulate(
     env_engine = os.environ.get("REPRO_SIM_ENGINE")
     if env_engine:
         cfg = dataclasses.replace(cfg, engine=env_engine)
-    if cfg.engine not in ("reference", "batched"):
-        raise ValueError(f"unknown SimConfig.engine: {cfg.engine!r}")
+    if cfg.engine not in ENGINES:
+        raise ValueError(f"unknown SimConfig.engine: {cfg.engine!r}; "
+                         f"valid engines: {', '.join(ENGINES)}")
     n_req = max(total_req // cfg.n_threads, 1)
     traces = gen_traces(workload, cfg.n_threads, n_req, seed=seed, scale=cfg.scale)
     threads = [Thread(t, tr) for t, tr in enumerate(traces)]
     page_space = int(max(tr["n_pages"] for tr in traces))
 
-    use_batched = cfg.engine == "batched"
+    use_turbo = cfg.engine == "turbo"
+    use_batched = cfg.engine == "batched" or use_turbo
     if use_batched:
         from repro.core import engine as _engine
 
         use_batched = _engine.supported(cfg)
-    if use_batched:
+        use_turbo = use_turbo and use_batched
+    _turbo = None
+    if use_turbo:
+        from repro.core import turbo as _turbo_mod
+
+        _turbo = _turbo_mod
+        _engine.reset_cache_stats()
+        _engine.reset_fused_stats()
+        _turbo.reset_turbo_stats()
+        m = _engine.BatchedMachine(cfg, seed, page_space)
+        # fast-math driver: run_fused's structure with the float timeline
+        # chains replaced by gap prefix-sums + count*constant folds
+        cores = _turbo.run_turbo(m, cfg, threads)
+    elif use_batched:
         _engine.reset_cache_stats()
         _engine.reset_fused_stats()
         m = _engine.BatchedMachine(cfg, seed, page_space)
@@ -717,6 +747,11 @@ def simulate(
 
     st = m.stats
     ds = m.state
+    if _turbo is not None:
+        # the engine's own reassociation bound over the run's timelines
+        # (0.0 when the conflict-class fallback ran the exact path)
+        st.turbo_drift_max = _turbo.TURBO_STATS["drift_bound_max"]
+        st.turbo_drift_mean = _turbo.TURBO_STATS["drift_bound_mean"]
     exec_ns = max(cores)
     st.exec_ns = exec_ns
     st.busy_ns = ds.chan_busy_ns

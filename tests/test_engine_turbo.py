@@ -1,0 +1,203 @@
+"""Fast-math turbo engine: the two-tier contract.
+
+core/turbo.run_turbo replaces the fused engine's four per-event IEEE
+float chains with gap prefix-sums and count*constant folds. That buys
+speed by reassociating float additions — so its contract splits in two:
+
+  * EXACT — every discrete decision and structure must be bit-equal to
+    the reference engine: scheduler order, per-class event counts, FTL
+    l2p/p2l/wear, WAF, GC events, fault/QoS counters, and the final
+    DeviceState discrete arrays (DeviceState.discrete_signature()).
+  * APPROXIMATE — finish times, AMAT, latency percentiles may drift
+    within SimConfig.turbo_rtol; the engine exports its own a-priori
+    bound as turbo_drift_max / turbo_drift_mean and must refuse (raise)
+    when the bound exceeds the configured tolerance.
+
+Conflict classes (fault/QoS/obs-active configs, inline-only promotion
+policies) must refuse the fast path entirely and run the bit-exact
+fallback, reporting drift 0.0.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs.base import SimConfig, VARIANTS
+from repro.core import engine as _engine
+from repro.core import turbo as _turbo
+from repro.core.simulator import (ENGINES, Machine, Thread,
+                                  _reference_quantum, _run_scheduler,
+                                  simulate)
+from repro.core.traces import gen_traces
+
+from tests._hypothesis_compat import given, settings, st
+
+# Timing outputs: the APPROXIMATE tier. Everything else in the result
+# dict is discrete (counts, WAF, GC events, ...) and must be bit-equal.
+APPROX_KEYS = {
+    "lat_sum", "lat_host", "lat_hit", "lat_miss", "amat_ns", "exec_ns",
+    "throughput_rps", "ssd_bw_util", "busy_ns", "gc_pause_ns_total",
+    "gc_pause_max_ns", "lat_p50_ns", "lat_p95_ns", "lat_p99_ns",
+    "lat_read_p50_ns", "lat_read_p95_ns", "lat_read_p99_ns",
+}
+# turbo-only exports and the obs blob (obs configs are a conflict class
+# with their own bit-exact assertion below)
+SKIP_KEYS = {"turbo_drift_max", "turbo_drift_mean", "obs"}
+
+RTOL = 1e-6  # asserted ceiling across the sweep; measured drift ~1e-12
+
+
+def _run(engine, workload, variant, n, seed=0, **overrides):
+    cfg = dataclasses.replace(SimConfig(), engine=engine, **overrides)
+    return simulate(workload, variant, cfg, total_req=n, seed=seed)
+
+
+def _assert_two_tier(a, b, rtol=RTOL):
+    assert set(a) | SKIP_KEYS == set(b) | SKIP_KEYS, set(a) ^ set(b)
+    for k in a:
+        if k in SKIP_KEYS:
+            continue
+        if k in APPROX_KEYS:
+            x, y = float(a[k]), float(b[k])
+            ref = max(abs(x), abs(y), 1e-300)
+            assert abs(x - y) / ref <= rtol, (k, a[k], b[k])
+        else:
+            assert a[k] == b[k], (k, a[k], b[k])
+
+
+def _assert_bit_exact(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        assert a[k] == b[k], (k, a[k], b[k])
+
+
+def _final_state(engine, workload, variant, n, seed=0, **overrides):
+    """Drive one engine exactly as simulate() does, but keep the machine
+    so the test can read the final DeviceState."""
+    cfg = dataclasses.replace(
+        SimConfig(), engine=engine, **overrides).variant(variant)
+    n_req = max(n // cfg.n_threads, 1)
+    traces = gen_traces(workload, cfg.n_threads, n_req, seed=seed,
+                        scale=cfg.scale)
+    threads = [Thread(t, tr) for t, tr in enumerate(traces)]
+    page_space = int(max(tr["n_pages"] for tr in traces))
+    if engine == "reference":
+        m = Machine(cfg, seed, page_space)
+        _run_scheduler(m, cfg, threads, _reference_quantum)
+    else:
+        assert _engine.supported(cfg)
+        _engine.reset_cache_stats()
+        _engine.reset_fused_stats()
+        m = _engine.BatchedMachine(cfg, seed, page_space)
+        if engine == "turbo":
+            _turbo.reset_turbo_stats()
+            _turbo.run_turbo(m, cfg, threads)
+        else:
+            _engine.run_fused(m, cfg, threads)
+    return m.state
+
+
+# ---------------------------------------------------------------- exact tier
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_turbo_discrete_state_bit_equal(variant):
+    """The final DeviceState's discrete signature — tier membership and
+    order, cache tags/stamps, log contents, FTL mapping/wear/frontiers,
+    integer counters — is bit-equal across all three engines."""
+    ref = _final_state("reference", "tpcc", variant, n=12_000)
+    tur = _final_state("turbo", "tpcc", variant, n=12_000)
+    assert ref.discrete_signature() == tur.discrete_signature()
+    bat = _final_state("batched", "tpcc", variant, n=12_000)
+    assert ref.discrete_signature() == bat.discrete_signature()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(["bfs-dense", "srad", "tpcc", "ycsb"]),
+       st.sampled_from(VARIANTS),
+       st.integers(min_value=0, max_value=3),
+       st.sampled_from(["greedy", "cost-benefit"]))
+def test_turbo_two_tier_property_sweep(workload, variant, seed, gc_policy):
+    """Randomized cells: discrete outputs bit-equal to the reference,
+    timing outputs within RTOL, drift bound honest and within rtol."""
+    a = _run("reference", workload, variant, n=8_000, seed=seed,
+             gc_policy=gc_policy)
+    b = _run("turbo", workload, variant, n=8_000, seed=seed,
+             gc_policy=gc_policy)
+    _assert_two_tier(a, b)
+    assert 0.0 <= b["turbo_drift_max"] <= SimConfig().turbo_rtol
+    assert 0.0 <= b["turbo_drift_mean"] <= b["turbo_drift_max"]
+
+
+# ------------------------------------------------------- conflict refusal
+
+@pytest.mark.parametrize("overrides", [
+    dict(fault=dataclasses.replace(
+        SimConfig().fault, read_error_rate=3e-3, outage_rate=1e-4)),
+    dict(gc_suspend=True, read_priority=True),
+    dict(obs=dataclasses.replace(SimConfig().obs, enabled=True)),
+    dict(promo_policy="tpp"),
+], ids=["faults", "qos", "obs", "inline-promo"])
+def test_turbo_conflict_refusal(overrides):
+    """Conflict classes refuse the fast path: TURBO_STATS counts the
+    fallback, the run is fully bit-exact (floats included), and the
+    exported drift is exactly 0.0."""
+    a = _run("batched", "tpcc", "skybyte-full", n=8_000, **overrides)
+    b = _run("turbo", "tpcc", "skybyte-full", n=8_000, **overrides)
+    assert _turbo.TURBO_STATS["fallbacks"] == 1
+    assert _turbo.TURBO_STATS["turbo_events"] == 0
+    assert b["turbo_drift_max"] == 0.0
+    assert b["turbo_drift_mean"] == 0.0
+    for k in a:
+        assert a[k] == b[k], (k, a[k], b[k])
+
+
+def test_turbo_fast_path_actually_engages():
+    """The refusal test above proves nothing if plain cells also fall
+    back: on a conflict-free cell the counter kernel must retire the
+    overwhelming majority of events."""
+    out = _run("turbo", "tpcc", "skybyte-full", n=12_000)
+    s = _turbo.TURBO_STATS
+    assert s["fallbacks"] == 0
+    assert s["turbo_events"] > 0
+    assert s["turbo_events"] >= out["n"] // 2
+    assert s["flushes"] > 0
+
+
+# ------------------------------------------------------------ drift bounds
+
+def test_turbo_drift_bound_positive_and_bounded():
+    """A nonempty turbo run must export a strictly positive a-priori
+    bound (it did reassociate) that stays within the default rtol."""
+    out = _run("turbo", "srad", "skybyte-cp", n=20_000)
+    assert 0.0 < out["turbo_drift_max"] <= SimConfig().turbo_rtol
+    assert 0.0 < out["turbo_drift_mean"] <= out["turbo_drift_max"]
+
+
+def test_turbo_rtol_violation_raises():
+    """turbo_rtol is a hard ceiling: a tolerance below the achievable
+    bound must raise instead of silently shipping drifted numbers."""
+    with pytest.raises(ValueError, match="turbo"):
+        _run("turbo", "tpcc", "skybyte-full", n=8_000, turbo_rtol=1e-15)
+
+
+def test_turbo_rtol_must_be_positive():
+    with pytest.raises(ValueError, match="turbo_rtol"):
+        dataclasses.replace(SimConfig(), turbo_rtol=0.0)
+
+
+# ------------------------------------------------------------- default path
+
+def test_zero_turbo_is_noop():
+    """Default (non-turbo) configs never touch the turbo machinery: the
+    stats stay zero and the result carries no drift exports above 0."""
+    _turbo.reset_turbo_stats()
+    out = _run("batched", "bfs-dense", "skybyte-c", n=8_000)
+    assert all(v == 0 for v in _turbo.TURBO_STATS.values())
+    assert out.get("turbo_drift_max", 0.0) == 0.0
+    assert out.get("turbo_drift_mean", 0.0) == 0.0
+
+
+def test_engine_registry_rejects_unknown():
+    cfg = dataclasses.replace(SimConfig(), engine="warp")
+    with pytest.raises(ValueError, match="valid engines"):
+        simulate("tpcc", "base-cssd", cfg, total_req=1_000)
+    assert "turbo" in ENGINES
